@@ -1,0 +1,109 @@
+"""Roofline table from the dry-run JSON records (deliverable (g)).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun] [--md]
+
+Per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), the
+MFU bound implied by the dominant term, and per-device memory.
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+COLS = ["arch", "shape", "mesh", "variant", "compute_s", "memory_s",
+        "collective_s", "dominant", "useful", "mfu_bound", "GB/dev",
+        "compile_s"]
+
+
+def load(dirpath):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        rec = json.load(open(path))
+        if isinstance(rec.get("mesh"), dict):
+            mesh = "multi" if "pod" in rec["mesh"] else "single"
+        else:  # skipped/error records carry the tag from the filename
+            mesh = "multi" if ".multi." in os.path.basename(path) else "single"
+        if "error" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "variant": rec.get("variant", "base"),
+                         "status": "ERROR"})
+            continue
+        if "skipped" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "variant": "base",
+                         "status": f"skipped: {rec['skipped']}"})
+            continue
+        r = rec["roofline"]
+        mem = rec["memory"]
+        gb = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+              + mem["output_size_in_bytes"]) / 1e9
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": mesh,
+            "variant": rec.get("variant", "base"),
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful": r.get("useful_compute_ratio", 0.0),
+            "mfu_bound": r.get("mfu_bound", 0.0),
+            "GB/dev": gb, "compile_s": rec.get("compile_s", 0.0),
+            "status": "ok",
+        })
+    return rows
+
+
+def fmt(rows, md=False):
+    sep = " | " if md else "  "
+    out = []
+    hdr = COLS + ["status"]
+    if md:
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+    else:
+        out.append(sep.join(f"{h:>14s}" for h in hdr))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows = sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                       r["mesh"], r["variant"]))
+    for r in rows:
+        cells = []
+        for c in hdr:
+            v = r.get(c, "")
+            if isinstance(v, float):
+                v = f"{v:.4f}" if c.endswith("_s") or c in ("useful", "mfu_bound") \
+                    else f"{v:.2f}"
+            cells.append(str(v))
+        if md:
+            out.append("| " + " | ".join(cells) + " |")
+        else:
+            out.append(sep.join(f"{c:>14s}" for c in cells))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    print(fmt(rows, md=args.md))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        trains = [r for r in ok if r["shape"] == "train_4k"] or ok
+        worst = min(trains, key=lambda r: r["mfu_bound"] or 9)
+        coll = max(ok, key=lambda r: r["collective_s"])
+        print(f"\n# cells ok={len(ok)} "
+              f"worst-train-mfu={worst['arch']}/{worst['mesh']}"
+              f"({worst['mfu_bound']:.4f}) "
+              f"most-collective={coll['arch']}/{coll['shape']}/{coll['mesh']}"
+              f"({coll['collective_s']:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

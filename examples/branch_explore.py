@@ -1,0 +1,73 @@
+"""Productive checkpointing (paper §3): guided model exploration.
+
+Training variations "share a common training path up until a point when they
+begin to diverge" — checkpoint the trunk once, clone it into branches with
+different hyper-parameters, train each from the shared snapshot, and use the
+DataStates lineage to find and continue the best branch.
+
+    PYTHONPATH=src python examples/branch_explore.py
+"""
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs.base import ShapeCfg, get_config
+from repro.core import DataStates, VelocClient, VelocConfig
+from repro.train.data import SyntheticStream
+from repro.train.steps import init_train_state, make_train_step
+
+SCRATCH = "/tmp/veloc_branch"
+shutil.rmtree(SCRATCH, ignore_errors=True)
+
+cfg = get_config("veloc-demo-100m").replace(num_layers=4, d_model=256,
+                                            d_ff=1024, vocab_size=8000)
+shape = ShapeCfg("ex", 128, 8, "train")
+stream = SyntheticStream(cfg, shape, seed=5)
+
+client = VelocClient(VelocConfig(name="explore", scratch=SCRATCH, mode="sync",
+                                 partner=False, xor_group=0, keep_versions=20))
+ds = DataStates(client.cluster)
+
+
+def train(state, lr, start, steps):
+    step_fn = jax.jit(make_train_step(cfg, lr=lr))
+    loss = None
+    for s in range(start, start + steps):
+        state, m = step_fn(state, stream.batch(s))
+        loss = float(m["loss"])
+    return state, loss
+
+
+# --- trunk: shared training path -------------------------------------------
+state = init_train_state(jax.random.PRNGKey(0), cfg)
+state, loss = train(state, 3e-4, 0, 8)
+client.checkpoint(state, version=8, defensive=False, meta={"phase": "trunk"})
+trunk = ds.record(8, metrics={"loss": loss})
+print(f"trunk @8 loss={loss:.4f}")
+
+# --- branches: clone the snapshot, vary the learning rate ------------------
+template = jax.eval_shape(lambda: init_train_state(jax.random.PRNGKey(0), cfg))
+results = {}
+for lr in (1e-4, 3e-4, 1e-3):
+    branch = f"lr={lr:g}"
+    ds.clone(trunk.id, branch)
+    _, base = client.restart_latest(template)  # re-hydrate the trunk snapshot
+    st, loss = train(base, lr, 8, 8)
+    v = int(1000 * lr) + 100
+    client.checkpoint(st, version=v, defensive=False, meta={"branch": branch})
+    ds.record(v, branch=branch, metrics={"loss": loss})
+    results[branch] = loss
+    print(f"branch {branch}: loss={loss:.4f}")
+
+# --- pick the winner via the lineage ----------------------------------------
+best = ds.best("loss")
+print(f"best branch: {best.branch} (loss={best.metrics['loss']:.4f})")
+print("lineage:", " -> ".join(
+    f"{s.branch}@v{s.version}" for s in ds.lineage(best.id)))
+assert best.branch == min(results, key=results.get)
+client.shutdown()
+print("branch/explore example OK")

@@ -1,0 +1,52 @@
+"""Quickstart: the VELOC API in 40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import VelocClient, VelocConfig
+
+SCRATCH = "/tmp/veloc_quickstart"
+shutil.rmtree(SCRATCH, ignore_errors=True)
+
+# 1. configure: async multi-level (L1 local, L3 external flush), checksums on
+cfg = VelocConfig(name="quickstart", scratch=SCRATCH, mode="async",
+                  partner=False, xor_group=0, encoding="zlib")
+client = VelocClient(cfg)
+
+# 2. your application state: any JAX pytree (sharded arrays welcome)
+state = {
+    "params": {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 256)),
+               "b": jnp.zeros((256,))},
+    "step": jnp.asarray(0),
+}
+
+# 3. checkpoint: blocks only for the on-device snapshot; serialization,
+#    compression, checksumming and the external flush drain in the backend
+for step in range(1, 4):
+    state["step"] = jnp.asarray(step)
+    ctx = client.checkpoint(state, version=step, meta={"step": step})
+    print(f"v{step}: app blocked {ctx.results['app_blocking_s']*1e3:.2f} ms")
+
+client.wait()  # join the background pipeline
+
+# 4. restart: newest restorable version, checksums verified on read
+version, restored = client.restart_latest(state)
+print(f"restored v{version}; step={int(restored['step'])}")
+assert version == 3 and int(restored["step"]) == 3
+
+# 5. the low-level VELOC-style API is also available
+client.protect("w", state["params"]["w"])
+client.checkpoint_begin(4)
+client.checkpoint_mem()
+client.checkpoint_end()
+client.wait()
+print("low-level API checkpoint v4 done")
+client.shutdown()

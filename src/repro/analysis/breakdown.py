@@ -1,0 +1,91 @@
+"""Per-op breakdown tool for hillclimbing: top HBM/FLOP/collective
+contributors of a dry-run cell, trip-count expanded.
+
+    PYTHONPATH=src python -m repro.analysis.breakdown --arch minicpm3-4b \
+        --shape train_4k --mesh multi --top 15
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+
+from repro.analysis.hlo import COLLECTIVES, HloModule, _type_elems_bytes
+
+
+def breakdown(compiled, n_devices, top=20):
+    mod = HloModule(compiled.as_text())
+    rows = []
+
+    def walk(comp, mult):
+        for ins in mod.comps.get(comp, []):
+            if ins.opcode == "while":
+                t = ins.trip_count()
+                for c in ins.calls():
+                    walk(c, mult * t)
+                continue
+            if ins.opcode in ("parameter", "constant", "tuple",
+                              "get-tuple-element", "bitcast", "after-all",
+                              "iota"):
+                continue
+            base = ins.opcode.replace("-start", "")
+            hbm = mod.effective_rw_bytes(comp, ins) * mult
+            fl = mod.dot_flops(comp, ins) * mult
+            coll = 0
+            if base in COLLECTIVES:
+                g = ins.group_size(n_devices)
+                from repro.analysis.hlo import _ring_factor
+                in_b = mod.operand_bytes(comp, ins)
+                out_b = _type_elems_bytes(ins.out_type)
+                payload = max(out_b if base == "all-gather" else in_b, 1)
+                coll = payload * _ring_factor(base, g) * mult
+            if ins.opcode == "fusion":
+                for c in ins.calls():
+                    for b in mod.comps.get(c, []):
+                        fl += mod.dot_flops(c, b) * mult
+            rows.append((hbm, fl, coll, mult, ins.opcode, ins.name[:45],
+                         ins.out_type[:40]))
+
+    walk(mod.entry, 1)
+    return rows
+
+
+def show(rows, key, top, label):
+    idx = {"hbm": 0, "flops": 1, "coll": 2}[key]
+    rows = sorted(rows, key=lambda r: -r[idx])[:top]
+    print(f"\n== top {label} ==")
+    for r in rows:
+        if r[idx] <= 0:
+            break
+        print(f"{r[idx]:.3e}  x{r[3]:<4d} {r[4]:<22s} {r[5]:<46s} {r[6]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    _, compiled, rec = lower_cell(args.arch, args.shape, mesh,
+                                  variant=args.variant)
+    r = rec["roofline"]
+    print(f"{args.arch}/{args.shape}/{args.mesh}: "
+          f"comp={r['compute_s']:.3f}s mem={r['memory_s']:.3f}s "
+          f"coll={r['collective_s']:.3f}s dom={r['dominant']} "
+          f"useful={r.get('useful_compute_ratio', 0):.3f}")
+    rows = breakdown(compiled, mesh.size, args.top)
+    show(rows, "hbm", args.top, "HBM bytes")
+    show(rows, "coll", args.top, "collective link bytes")
+    show(rows, "flops", args.top, "FLOPs")
+
+
+if __name__ == "__main__":
+    main()

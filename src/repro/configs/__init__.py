@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES, MLACfg, ModelConfig, MoECfg, ShapeCfg, get_config, list_configs,
+    smoke_config,
+)

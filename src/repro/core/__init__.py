@@ -1,0 +1,3 @@
+"""VELOC core: very low overhead multi-level asynchronous checkpointing."""
+from repro.core.api import Cluster, VelocClient, VelocConfig, make_client  # noqa: F401
+from repro.core.datastates import DataStates, Snapshot  # noqa: F401

@@ -1,0 +1,310 @@
+"""VELOC public API: the Cluster storage fabric and the VelocClient.
+
+Client API mirrors VELOC's C interface (mem_protect / checkpoint_begin /
+checkpoint_mem / checkpoint_end / restart_*) plus a pythonic high-level pair
+``checkpoint(state, version)`` / ``restart_latest(template)`` for JAX
+pytrees.
+
+Async semantics are the paper's: ``checkpoint`` blocks only while the L1
+device snapshot is taken (an in-HLO HBM copy when the caller passes the
+fused-capture output); D2H, serialization, local persist, partner/XOR and
+the external flush all run in the ActiveBackend.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core import format as fmt
+from repro.core.backend import ActiveBackend, RateLimiter
+from repro.core.capture import iter_host_regions, snapshot_device, tree_from_regions
+from repro.core.engine import Engine
+from repro.core.modules import (CheckpointContext, FlushModule, IntervalModule,
+                                LocalWriteModule, PartnerModule, SerializeModule,
+                                VerifyModule, XorGroupModule)
+from repro.core.phases import EMAPhasePredictor, GRUPhasePredictor
+from repro.core.storage import DRAMTier, FileTier, KVTier, StorageTier
+
+
+@dataclass
+class VelocConfig:
+    name: str = "ckpt"
+    mode: str = "async"                 # async | sync
+    scratch: str = "/tmp/veloc"         # node-local + external roots
+    interval_s: Optional[float] = None  # defensive-checkpoint interval
+    encoding: str = "raw"               # raw | q8 | zlib  (compression module)
+    checksums: bool = True
+    partner: bool = True
+    partner_distance: int = 1
+    xor_group: int = 4                  # 0 disables the XOR module
+    rs_parity: int = 0                  # >0: Reed-Solomon instead of XOR
+    flush: bool = True
+    verify: bool = False
+    rate_limit_bps: Optional[float] = None
+    backend_workers: int = 2
+    phase_predictor: str = "none"       # none | ema | gru
+    use_kv_external: bool = False       # add the DAOS-style KV tier
+    keep_versions: int = 3              # GC horizon
+
+
+class Cluster:
+    """Storage fabric + collective-commit coordination for ``nranks``
+    simulated nodes (one process).  On a real deployment this maps to: node
+    tiers = each host's DRAM/NVMe; external tiers = the shared PFS/DAOS;
+    note_shard coordination via the shared file system."""
+
+    def __init__(self, cfg: VelocConfig, nranks: int = 1):
+        self.cfg = cfg
+        self.nranks = nranks
+        self._lock = threading.Lock()
+        root = cfg.scratch
+        self._node_tiers = []
+        for r in range(nranks):
+            self._node_tiers.append([
+                DRAMTier(name=f"dram{r}", gbps=100.0),
+                FileTier(os.path.join(root, f"node{r}"), name=f"ssd{r}",
+                         gbps=3.0, persistent=True, node_local=True),
+            ])
+        self.external_tiers: list[StorageTier] = [
+            FileTier(os.path.join(root, "pfs"), name="pfs", gbps=1.0,
+                     persistent=True, node_local=False)]
+        if cfg.use_kv_external:
+            self.external_tiers.append(
+                KVTier(name="kv", gbps=2.0,
+                       journal=os.path.join(root, "kvstore")))
+        self.rate_limiter = RateLimiter(cfg.rate_limit_bps)
+        self.phase_gate: Optional[Callable[[], float]] = None
+        # registry[(name, version, level)] = {rank: digest}
+        self._registry: dict[tuple, dict[int, str]] = {}
+        self._meta: dict[tuple, dict] = {}
+
+    # ------------------------------------------------------------------
+    def node_tiers(self, rank: int) -> list[StorageTier]:
+        return self._node_tiers[rank]
+
+    def fetch_shard(self, name: str, version: int, rank: int) -> Optional[bytes]:
+        key = fmt.shard_key(name, version, rank)
+        for tier in self._node_tiers[rank] + self.external_tiers:
+            blob = tier.get(key)
+            if blob is not None:
+                return blob
+        return None
+
+    def fetch_partner_copy(self, name: str, version: int, rank: int,
+                           distance: int) -> Optional[bytes]:
+        from repro.core.erasure import partner_of
+
+        holder = partner_of(rank, self.nranks, distance)
+        key = fmt.shard_key(name, version, rank) + ".partner"
+        for tier in self._node_tiers[holder]:
+            blob = tier.get(key)
+            if blob is not None:
+                return blob
+        return None
+
+    def fetch_parity(self, name: str, version: int, group: int) -> Optional[bytes]:
+        from repro.core.erasure import parity_home
+
+        g = min(self.cfg.xor_group, self.nranks)
+        home = parity_home(group, g, self.nranks) if g >= 2 else -1
+        key = fmt.parity_key(name, version, group)
+        tiers = (self._node_tiers[home] if 0 <= home < self.nranks else []) \
+            + self.external_tiers
+        for tier in tiers:
+            blob = tier.get(key)
+            if blob is not None:
+                return blob
+        return None
+
+    def note_shard(self, name, version, level, rank, digest, meta=None):
+        """Collective commit: last rank to report publishes the manifest."""
+        with self._lock:
+            k = (name, version, level)
+            reg = self._registry.setdefault(k, {})
+            reg[rank] = digest
+            if meta:
+                self._meta[(name, version)] = dict(meta)
+            if len(reg) == self.nranks:
+                blob = fmt.make_manifest(
+                    name, version, self.nranks, level=level,
+                    shard_digests=reg, meta=self._meta.get((name, version), {}),
+                    group_size=self.cfg.xor_group)
+                key = fmt.manifest_key(name, version) + f".{level}"
+                for tier in self.external_tiers:
+                    tier.put(key, blob)
+
+    def manifests(self, name: str) -> list[dict]:
+        out = {}
+        for tier in self.external_tiers:
+            for key in tier.keys(f"{name}/"):
+                if "/manifest" in key:
+                    blob = tier.get(key)
+                    if blob:
+                        m = fmt.parse_manifest(blob)
+                        out[(m["version"], m["level"])] = m
+        return [m for _, m in sorted(out.items(), reverse=True)]
+
+    # -- failure / GC ----------------------------------------------------
+    def fail_node(self, rank: int):
+        """Simulate fail-stop node loss: volatile + node-local data gone."""
+        for tier in self._node_tiers[rank]:
+            tier.wipe()
+
+    def gc(self, name: str, keep: int):
+        with self._lock:
+            versions = sorted({v for (n, v, _l) in self._registry if n == name},
+                              reverse=True)
+            drop = versions[keep:]
+            for v in drop:
+                for r in range(self.nranks):
+                    key = fmt.shard_key(name, v, r)
+                    for tier in self._node_tiers[r] + self.external_tiers:
+                        tier.delete(key)
+                        tier.delete(key + ".partner")
+                for k in [k for k in self._registry if k[0] == name and k[1] == v]:
+                    self._registry.pop(k, None)
+
+
+class VelocClient:
+    """Per-rank checkpointing client (paper §2 API)."""
+
+    def __init__(self, cfg: VelocConfig, cluster: Optional[Cluster] = None,
+                 rank: int = 0, mesh=None):
+        self.cfg = cfg
+        self.cluster = cluster or Cluster(cfg, nranks=1)
+        self.rank = rank
+        self.mesh = mesh
+        self._protected: dict[str, Any] = {}
+        self._open_version: Optional[int] = None
+        self._staged: list[fmt.Region] = []
+        self.predictor = None
+        if cfg.phase_predictor == "ema":
+            self.predictor = EMAPhasePredictor()
+        elif cfg.phase_predictor == "gru":
+            self.predictor = GRUPhasePredictor()
+        if self.predictor is not None:
+            self.cluster.phase_gate = self.predictor.idle_wait
+        self.backend = None
+        if cfg.mode == "async":
+            self.backend = ActiveBackend(
+                workers=cfg.backend_workers,
+                rate_limiter=self.cluster.rate_limiter,
+                phase_gate=self.cluster.phase_gate)
+        mods = [IntervalModule(cfg.interval_s),
+                SerializeModule(cfg.encoding, cfg.checksums),
+                LocalWriteModule()]
+        if cfg.partner:
+            mods.append(PartnerModule(cfg.partner_distance))
+        if cfg.xor_group >= 2:
+            mods.append(XorGroupModule(cfg.xor_group, cfg.rs_parity))
+        if cfg.flush:
+            mods.append(FlushModule())
+        if cfg.verify:
+            mods.append(VerifyModule())
+        # async mode: only the interval gate blocks the app (priority<=5);
+        # sync mode: the whole pipeline runs inline.
+        self.engine = Engine(mods, self.backend, blocking_cut=5)
+        self._history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    # low-level VELOC-style API
+    # ------------------------------------------------------------------
+    def protect(self, name: str, value: Any):
+        """Declare a critical memory region (array or pytree)."""
+        self._protected[name] = value
+
+    def unprotect(self, name: str):
+        self._protected.pop(name, None)
+
+    def checkpoint_begin(self, version: int):
+        assert self._open_version is None, "checkpoint already open"
+        self._open_version = version
+        self._staged = []
+
+    def checkpoint_mem(self):
+        """Stage every protected region (host copy of current values)."""
+        assert self._open_version is not None
+        for name, value in self._protected.items():
+            for r in iter_host_regions(value, rank_prefix=f"{name}/"):
+                self._staged.append(r)
+
+    def checkpoint_end(self, *, defensive: bool = True, meta=None) -> CheckpointContext:
+        assert self._open_version is not None
+        version = self._open_version
+        self._open_version = None
+        regions = list(self._staged)
+        self._staged = []
+        return self._submit(regions, version, defensive=defensive, meta=meta)
+
+    # ------------------------------------------------------------------
+    # high-level pytree API
+    # ------------------------------------------------------------------
+    def checkpoint(self, state, version: int, *, snap=None, defensive: bool = True,
+                   meta=None, device_snapshot: bool = True) -> CheckpointContext:
+        """Checkpoint a (possibly device-resident, sharded) pytree.
+
+        Blocking work: the on-device snapshot copy only (or nothing, when the
+        caller passes the fused-capture ``snap``).  Everything else drains in
+        the backend."""
+        t0 = time.monotonic()
+        if snap is None:
+            snap = snapshot_device(state) if device_snapshot else state
+        if self.cfg.mode == "async":
+            regions: Any = lambda: list(iter_host_regions(snap))
+        else:
+            regions = list(iter_host_regions(snap))
+        ctx = self._submit(regions, version, defensive=defensive, meta=meta)
+        ctx.results["app_blocking_s"] = time.monotonic() - t0
+        return ctx
+
+    def _submit(self, regions, version, *, defensive, meta) -> CheckpointContext:
+        ctx = CheckpointContext(
+            name=self.cfg.name, version=version, rank=self.rank,
+            nranks=self.cluster.nranks, regions=regions,
+            meta=dict(meta or {}), cluster=self.cluster, defensive=defensive)
+        self.engine.submit(ctx)
+        self._history.append({"version": version, "skipped": ctx.skipped,
+                              "blocking_s": ctx.results.get("blocking_s")})
+        if self.cfg.keep_versions:
+            self.cluster.gc(self.cfg.name, self.cfg.keep_versions + 1)
+        return ctx
+
+    def wait(self, version: Optional[int] = None, timeout: Optional[float] = None
+             ) -> bool:
+        return self.engine.wait(self.cfg.name, self.rank, version, timeout)
+
+    def tick(self, phase: str):
+        if self.predictor is not None:
+            self.predictor.tick(phase)
+
+    # ------------------------------------------------------------------
+    def restart_latest(self, template, shardings=None):
+        """Find the newest restorable version and rebuild the pytree.
+        Returns (version, state) or (None, None)."""
+        from repro.core import restart
+
+        found = restart.find_restart(self.cluster, self.cfg.name)
+        for cand in found:
+            try:
+                regions = restart.load_rank_regions(
+                    self.cluster, self.cfg.name, cand["version"], self.rank,
+                    distance=self.cfg.partner_distance)
+                state = tree_from_regions(template, regions, shardings)
+                return cand["version"], state
+            except Exception:  # noqa: BLE001 — fall back a level/version
+                continue
+        return None, None
+
+    def shutdown(self):
+        if self.backend is not None:
+            self.backend.shutdown()
+
+
+def make_client(cfg: Optional[VelocConfig] = None, **kw) -> VelocClient:
+    cfg = cfg or VelocConfig(**kw)
+    return VelocClient(cfg)

@@ -1,0 +1,192 @@
+"""The VELOC *active backend*: asynchronous pipeline execution with
+interference mitigation (paper §2, "Optimized Asynchronous Multi-Level
+Strategies").
+
+  - worker threads draining a priority queue (lower priority value first —
+    module pipeline order; FIFO within a priority);
+  - a token-bucket RateLimiter bounding background bytes/sec so flushes do
+    not compete with the application for host bandwidth (the TPU analogue of
+    "run background operations at lower OS priority");
+  - an optional *phase gate*: a StepPhasePredictor callback that delays
+    chunk transfers into predicted idle windows (the paper's
+    sequence-model-based scheduling, §2 / ref [6]);
+  - newest-version preemption: when checkpoints outpace draining, superseded
+    versions of the same task kind are dropped (straggler mitigation — the
+    app never blocks on a slow flush);
+  - deadlines: a task past its deadline is demoted, not blocking.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class RateLimiter:
+    """Token bucket in bytes/sec.  acquire() blocks until budget allows."""
+
+    def __init__(self, bytes_per_sec: Optional[float] = None, burst: float = 2.0,
+                 clock=time.monotonic, sleep=time.sleep):
+        self.rate = bytes_per_sec
+        self.burst = burst
+        self._tokens = (bytes_per_sec or 0) * burst
+        self._last = clock()
+        self._clock, self._sleep = clock, sleep
+        self._lock = threading.Lock()
+
+    def acquire(self, nbytes: int):
+        if self.rate is None:
+            return
+        while True:
+            with self._lock:
+                now = self._clock()
+                self._tokens = min(self.rate * self.burst,
+                                   self._tokens + (now - self._last) * self.rate)
+                self._last = now
+                if self._tokens >= nbytes:
+                    self._tokens -= nbytes
+                    return
+                need = (nbytes - self._tokens) / self.rate
+            self._sleep(min(need, 0.05))
+
+
+@dataclass(order=True)
+class _Task:
+    priority: int
+    seq: int
+    version: int = field(compare=False)
+    kind: str = field(compare=False)
+    fn: Callable = field(compare=False)
+    deadline: Optional[float] = field(compare=False, default=None)
+
+
+class TaskError(Exception):
+    pass
+
+
+class ActiveBackend:
+    """Priority-queue worker pool for background checkpoint pipeline stages."""
+
+    def __init__(self, workers: int = 1, rate_limiter: Optional[RateLimiter] = None,
+                 phase_gate: Optional[Callable[[], float]] = None):
+        self.rate_limiter = rate_limiter or RateLimiter(None)
+        self.phase_gate = phase_gate  # returns seconds to wait before heavy IO
+        self._heap: list[_Task] = []
+        self._seq = 0
+        self._cv = threading.Condition()
+        self._done: dict[tuple[str, int], str] = {}  # (kind, version) -> status
+        self._errors: list[str] = []
+        self._inflight = 0
+        self._stop = False
+        self._latest: dict[str, int] = {}  # kind -> newest version enqueued
+        self._threads = [threading.Thread(target=self._worker, daemon=True,
+                                          name=f"veloc-backend-{i}")
+                         for i in range(workers)]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, kind: str, version: int, fn: Callable, *, priority: int = 50,
+               deadline_s: Optional[float] = None, supersede: bool = False):
+        """supersede=True drops queued (not running) older versions of kind."""
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("backend stopped")
+            if supersede:
+                before = len(self._heap)
+                kept = []
+                for t in self._heap:
+                    if t.kind == kind and t.version < version:
+                        self._done[(t.kind, t.version)] = "superseded"
+                    else:
+                        kept.append(t)
+                if len(kept) != before:
+                    self._heap = kept
+                    heapq.heapify(self._heap)
+            self._seq += 1
+            dl = time.monotonic() + deadline_s if deadline_s else None
+            heapq.heappush(self._heap, _Task(priority, self._seq, version, kind,
+                                             fn, dl))
+            self._latest[kind] = max(self._latest.get(kind, -1), version)
+            self._cv.notify()
+
+    def _worker(self):
+        while True:
+            with self._cv:
+                while not self._heap and not self._stop:
+                    self._cv.wait(0.1)
+                if self._stop and not self._heap:
+                    return
+                if not self._heap:
+                    continue
+                task = heapq.heappop(self._heap)
+                self._inflight += 1
+            status = "done"
+            try:
+                if task.deadline is not None and time.monotonic() > task.deadline:
+                    status = "deadline-miss"
+                else:
+                    if self.phase_gate is not None:
+                        wait = self.phase_gate()
+                        if wait > 0:
+                            time.sleep(min(wait, 1.0))
+                    task.fn()
+            except Exception:  # noqa: BLE001 — recorded, surfaced via errors()
+                status = "error"
+                with self._cv:
+                    self._errors.append(
+                        f"{task.kind} v{task.version}:\n{traceback.format_exc()}")
+            with self._cv:
+                self._done[(task.kind, task.version)] = status
+                self._inflight -= 1
+                self._cv.notify_all()
+
+    # ------------------------------------------------------------------
+    def wait(self, kind: Optional[str] = None, version: Optional[int] = None,
+             timeout: Optional[float] = None) -> bool:
+        """Block until matching tasks drain.  Returns False on timeout."""
+
+        def outstanding():
+            pend = [t for t in self._heap
+                    if (kind is None or t.kind == kind)
+                    and (version is None or t.version == version)]
+            if pend:
+                return True
+            if version is not None and kind is not None:
+                return (kind, version) not in self._done and \
+                    version <= self._latest.get(kind, -1)
+            return self._inflight > 0
+
+        end = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while outstanding():
+                remaining = None if end is None else end - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cv.wait(remaining if remaining is not None else 0.2)
+        return True
+
+    def status(self, kind: str, version: int) -> str:
+        with self._cv:
+            if (kind, version) in self._done:
+                return self._done[(kind, version)]
+            for t in self._heap:
+                if t.kind == kind and t.version == version:
+                    return "queued"
+        return "running" if self._inflight else "unknown"
+
+    def errors(self) -> list[str]:
+        with self._cv:
+            return list(self._errors)
+
+    def shutdown(self, wait: bool = True):
+        if wait:
+            self.wait()
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=5)

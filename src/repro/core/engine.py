@@ -1,0 +1,70 @@
+"""The VELOC pipeline engine (paper Figure 1).
+
+Runs the module pipeline either synchronously (library mode — the engine is
+"linked into the application") or asynchronously (active-backend mode): the
+modules up to ``blocking_cut`` priority run inline — VELOC semantics block
+the application only until the fastest level holds the checkpoint — and the
+remainder is handed to the ActiveBackend worker, newest-version preemption
+included.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.core.backend import ActiveBackend
+from repro.core.modules import CheckpointContext, Module
+
+
+class Engine:
+    def __init__(self, modules: list[Module], backend: Optional[ActiveBackend],
+                 *, blocking_cut: int = 25):
+        self.modules = sorted(modules, key=lambda m: m.priority)
+        self.backend = backend
+        self.blocking_cut = blocking_cut
+
+    def module(self, name: str) -> Module:
+        for m in self.modules:
+            if m.name == name:
+                return m
+        raise KeyError(name)
+
+    def set_enabled(self, name: str, enabled: bool):
+        self.module(name).enabled = enabled
+
+    # ------------------------------------------------------------------
+    def _run(self, mods, ctx: CheckpointContext):
+        for m in mods:
+            if not m.enabled:
+                continue
+            status = m.process(ctx)
+            ctx.results[f"{m.name}.status"] = status
+            if ctx.skipped:
+                break
+            if status == "error":
+                # record and continue — a failed optional stage (e.g. verify)
+                # must not take the pipeline down; level tags tell restart
+                # what is trustworthy.
+                ctx.results.setdefault("errors", []).append(m.name)
+
+    def submit(self, ctx: CheckpointContext) -> CheckpointContext:
+        front = [m for m in self.modules if m.priority <= self.blocking_cut]
+        rest = [m for m in self.modules if m.priority > self.blocking_cut]
+        self._run(front, ctx)
+        ctx.results["blocking_s"] = time.monotonic() - ctx.t_begin
+        if ctx.skipped:
+            return ctx
+        if self.backend is None:
+            self._run(rest, ctx)
+        else:
+            self.backend.submit(
+                f"pipe:{ctx.name}:{ctx.rank}", ctx.version,
+                lambda: self._run(rest, ctx),
+                priority=50, supersede=True)
+        return ctx
+
+    def wait(self, name: str, rank: int, version: Optional[int] = None,
+             timeout: Optional[float] = None) -> bool:
+        if self.backend is None:
+            return True
+        return self.backend.wait(f"pipe:{name}:{rank}", version, timeout)

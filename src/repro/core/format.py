@@ -1,0 +1,158 @@
+"""Checkpoint shard binary format + global manifest (two-phase commit).
+
+Shard layout:  [MAGIC 8B][header_len u64][header JSON][payload bytes...]
+The header's region table records (name, shape, dtype, offset, nbytes,
+digest, encoding) per protected region — the on-disk realization of the
+VELOC ``mem_protect`` declarations.  Encodings: "raw", "q8" (block int8 via
+the Pallas quantize kernel), "zlib".
+
+The manifest is the collective-commit record: shards are written first
+(atomic per-tier), then the manifest is published atomically; a checkpoint
+version exists iff its manifest does — torn checkpoints are impossible.
+"""
+from __future__ import annotations
+
+import io
+import json
+import zlib
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.kernels import ops as kops
+
+MAGIC = b"VELOCJX1"
+
+
+@dataclass
+class Region:
+    name: str
+    array: np.ndarray
+    # global layout metadata for elastic restart:
+    global_shape: tuple = ()
+    shard_axis: int = -1  # axis this rank's piece slices (-1 = replicated)
+    shard_index: int = 0
+    shard_count: int = 1
+
+
+def serialize_shard(regions: list[Region], meta: dict, *, encoding: str = "raw",
+                    checksums: bool = True) -> bytes:
+    payload = io.BytesIO()
+    table = []
+    for r in regions:
+        arr = np.ascontiguousarray(r.array)
+        entry: dict[str, Any] = {
+            "name": r.name,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "global_shape": list(r.global_shape or arr.shape),
+            "shard_axis": r.shard_axis,
+            "shard_index": r.shard_index,
+            "shard_count": r.shard_count,
+            "encoding": encoding,
+        }
+        if encoding == "q8" and arr.dtype.kind == "f" and arr.size >= 1024:
+            q, s, n, shape = kops.quantize(arr)
+            blob = (np.int64(q.shape[0]).tobytes() + np.int64(q.shape[1]).tobytes()
+                    + q.tobytes() + s.tobytes())
+            entry["q8_n"] = int(n)
+        elif encoding == "zlib":
+            blob = zlib.compress(arr.tobytes(), level=1)
+        else:
+            entry["encoding"] = "raw"
+            blob = arr.tobytes()
+        if checksums:
+            entry["digest"] = kops.digest(blob)
+        entry["offset"] = payload.tell()
+        entry["nbytes"] = len(blob)
+        payload.write(blob)
+        table.append(entry)
+    header = json.dumps({"regions": table, "meta": meta}).encode()
+    out = io.BytesIO()
+    out.write(MAGIC)
+    out.write(np.uint64(len(header)).tobytes())
+    out.write(header)
+    out.write(payload.getbuffer())
+    return out.getvalue()
+
+
+class ShardReader:
+    def __init__(self, blob: bytes):
+        assert blob[:8] == MAGIC, "bad shard magic"
+        hlen = int(np.frombuffer(blob[8:16], np.uint64)[0])
+        self.header = json.loads(blob[16:16 + hlen].decode())
+        self._payload = memoryview(blob)[16 + hlen:]
+
+    @property
+    def meta(self) -> dict:
+        return self.header["meta"]
+
+    @property
+    def region_names(self) -> list[str]:
+        return [r["name"] for r in self.header["regions"]]
+
+    def entry(self, name: str) -> dict:
+        for r in self.header["regions"]:
+            if r["name"] == name:
+                return r
+        raise KeyError(name)
+
+    def verify(self, name: str) -> bool:
+        e = self.entry(name)
+        if "digest" not in e:
+            return True
+        blob = bytes(self._payload[e["offset"]:e["offset"] + e["nbytes"]])
+        return kops.digest(blob) == e["digest"]
+
+    def read(self, name: str, *, verify: bool = True) -> np.ndarray:
+        e = self.entry(name)
+        blob = bytes(self._payload[e["offset"]:e["offset"] + e["nbytes"]])
+        if verify and "digest" in e and kops.digest(blob) != e["digest"]:
+            raise IOError(f"checksum mismatch in region {name!r}")
+        dtype = np.dtype(e["dtype"])
+        shape = tuple(e["shape"])
+        if e["encoding"] == "q8":
+            r0 = int(np.frombuffer(blob[:8], np.int64)[0])
+            r1 = int(np.frombuffer(blob[8:16], np.int64)[0])
+            qb = r0 * r1
+            q = np.frombuffer(blob[16:16 + qb], np.int8).reshape(r0, r1)
+            s = np.frombuffer(blob[16 + qb:16 + qb + 4 * r0], np.float32)
+            return kops.dequantize(q, s, e["q8_n"], shape).astype(dtype)
+        if e["encoding"] == "zlib":
+            return np.frombuffer(zlib.decompress(blob), dtype).reshape(shape)
+        return np.frombuffer(blob, dtype).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# manifest
+# ---------------------------------------------------------------------------
+
+
+def manifest_key(name: str, version: int) -> str:
+    return f"{name}/v{version:08d}/manifest"
+
+
+def shard_key(name: str, version: int, rank: int) -> str:
+    return f"{name}/v{version:08d}/shard_{rank:05d}"
+
+
+def parity_key(name: str, version: int, group: int) -> str:
+    return f"{name}/v{version:08d}/parity_{group:05d}"
+
+
+def make_manifest(name: str, version: int, nranks: int, *, level: str,
+                  shard_digests: dict[int, str], meta: dict | None = None,
+                  parent: int | None = None, group_size: int = 0) -> bytes:
+    return json.dumps({
+        "name": name, "version": version, "nranks": nranks, "level": level,
+        "shard_digests": {str(k): v for k, v in shard_digests.items()},
+        "meta": meta or {}, "parent": parent, "group_size": group_size,
+        "complete": True,
+    }).encode()
+
+
+def parse_manifest(blob: bytes) -> dict:
+    m = json.loads(blob.decode())
+    m["shard_digests"] = {int(k): v for k, v in m["shard_digests"].items()}
+    return m

@@ -1,0 +1,243 @@
+"""The VELOC module pipeline (paper §2, "Flexibility through Modular Design"
++ Figure 1).
+
+Every I/O / resilience strategy is an independent ``Module`` with a
+priority; a checkpoint request walks the pipeline in priority order and each
+module acts or passes based on its own state and the outcome of earlier
+modules (recorded in ``ctx.results``).  Modules toggle at runtime via
+``enabled`` — the paper's "simple switch" — and custom modules (compression,
+integrity, format conversion) slot in by priority.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import erasure, format as fmt
+from repro.core.storage import StorageTier, pick_tier
+from repro.kernels import ops as kops
+
+
+@dataclass
+class CheckpointContext:
+    name: str
+    version: int
+    rank: int
+    nranks: int
+    regions: list[fmt.Region]
+    meta: dict
+    cluster: Any  # repro.core.api.Cluster
+    defensive: bool = True  # False for productive/explicit checkpoints
+    shard: Optional[bytes] = None
+    digest: Optional[str] = None
+    results: dict = field(default_factory=dict)
+    skipped: bool = False
+    t_begin: float = field(default_factory=time.monotonic)
+
+
+class Module:
+    name = "module"
+    priority = 50
+    enabled = True
+
+    def process(self, ctx: CheckpointContext) -> str:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<{type(self).__name__} prio={self.priority} " \
+               f"{'on' if self.enabled else 'off'}>"
+
+
+class IntervalModule(Module):
+    """Skips defensive checkpoints arriving before the optimal interval
+    (interval supplied by repro.core.interval — Young/Daly or the ML
+    predictor).  Productive/explicit checkpoints always pass."""
+
+    name = "interval"
+    priority = 0
+
+    def __init__(self, interval_s: Optional[float] = None, clock=time.monotonic):
+        self.interval_s = interval_s
+        self._clock = clock
+        self._last: Optional[float] = None
+
+    def process(self, ctx):
+        if not ctx.defensive or self.interval_s is None:
+            return "pass"
+        now = self._clock()
+        if self._last is not None and now - self._last < self.interval_s:
+            ctx.skipped = True
+            ctx.results["skip_reason"] = "interval"
+            return "skip"
+        self._last = now
+        return "ok"
+
+
+class SerializeModule(Module):
+    """Regions -> shard bytes (repro.core.format), with the encoding chosen
+    by the compression switch ("raw" | "q8" | "zlib")."""
+
+    name = "serialize"
+    priority = 10
+
+    def __init__(self, encoding: str = "raw", checksums: bool = True):
+        self.encoding = encoding
+        self.checksums = checksums
+
+    def process(self, ctx):
+        if callable(ctx.regions):
+            # async mode: D2H deferred into the backend — the app was only
+            # blocked for the on-device snapshot.
+            ctx.regions = ctx.regions()
+        ctx.shard = fmt.serialize_shard(ctx.regions, ctx.meta,
+                                        encoding=self.encoding,
+                                        checksums=self.checksums)
+        ctx.digest = kops.digest(ctx.shard)
+        ctx.results["shard_bytes"] = len(ctx.shard)
+        return "ok"
+
+
+class LocalWriteModule(Module):
+    """L1: persist the shard to the best node-local tier (pick_tier encodes
+    the heterogeneous-storage scheduling)."""
+
+    name = "l1-local"
+    priority = 20
+
+    def process(self, ctx):
+        tiers = ctx.cluster.node_tiers(ctx.rank)
+        tier = pick_tier(tiers)
+        tier.put(fmt.shard_key(ctx.name, ctx.version, ctx.rank), ctx.shard)
+        ctx.results["l1_tier"] = tier.info.name
+        ctx.cluster.note_shard(ctx.name, ctx.version, "L1", ctx.rank, ctx.digest,
+                               meta=ctx.meta)
+        return "ok"
+
+
+class PartnerModule(Module):
+    """L2a: partner replication — push my shard into my partner's node-local
+    storage so a lost node's state survives on its neighbour."""
+
+    name = "l2-partner"
+    priority = 30
+
+    def __init__(self, distance: int = 1):
+        self.distance = distance
+
+    def process(self, ctx):
+        if ctx.nranks < 2:
+            return "pass"
+        partner = erasure.partner_of(ctx.rank, ctx.nranks, self.distance)
+        tier = pick_tier(ctx.cluster.node_tiers(partner))
+        tier.put(fmt.shard_key(ctx.name, ctx.version, ctx.rank) + ".partner",
+                 ctx.shard)
+        ctx.cluster.note_shard(ctx.name, ctx.version, "L2", ctx.rank, ctx.digest,
+                               meta=ctx.meta)
+        return "ok"
+
+
+class XorGroupModule(Module):
+    """L2b: XOR (or RS) erasure encoding across a group of ranks.  The group
+    leader pulls the group's shards (network stand-in: the cluster registry)
+    and stores parity in its node-local tier.  rs_parity>0 switches to
+    Reed-Solomon with that many parity shards (tolerates >1 failure)."""
+
+    name = "l2-xor"
+    priority = 32
+
+    def __init__(self, group_size: int = 4, rs_parity: int = 0):
+        self.group_size = group_size
+        self.rs_parity = rs_parity
+
+    def process(self, ctx):
+        g = min(self.group_size, ctx.nranks)
+        if g < 2:
+            return "pass"
+        gid, _gidx = erasure.group_of(ctx.rank, g)
+        members = [gid * g + i for i in range(g) if gid * g + i < ctx.nranks]
+        # event-driven encode: whichever group member reaches this module
+        # LAST (all member shards visible) performs the encode — order-free
+        # and idempotent under async racing.
+        shards = []
+        for r in members:
+            blob = ctx.cluster.fetch_shard(ctx.name, ctx.version, r)
+            if blob is None:
+                ctx.results["xor_status"] = f"group incomplete (rank {r})"
+                return "pass"
+            shards.append(blob)
+        lengths = [len(s) for s in shards]
+        if self.rs_parity > 0:
+            parities = erasure.rs_encode(shards, self.rs_parity)
+            payload = fmt.serialize_shard(
+                [fmt.Region(f"parity{j}", np.frombuffer(p, np.uint8))
+                 for j, p in enumerate(parities)],
+                {"members": members, "lengths": lengths, "rs": self.rs_parity})
+        else:
+            parity = erasure.xor_encode(shards)
+            payload = fmt.serialize_shard(
+                [fmt.Region("parity0", np.frombuffer(parity, np.uint8))],
+                {"members": members, "lengths": lengths, "rs": 0})
+        # cross-group placement: a node never stores the parity that protects
+        # its own shard (erasure.parity_home); single group -> external tier.
+        home = erasure.parity_home(gid, g, ctx.nranks)
+        if home < 0:
+            tier = pick_tier(ctx.cluster.external_tiers, need_persistent=True)
+        else:
+            tier = pick_tier(ctx.cluster.node_tiers(home))
+        tier.put(fmt.parity_key(ctx.name, ctx.version, gid), payload)
+        ctx.results["l2_group"] = gid
+        return "ok"
+
+
+class FlushModule(Module):
+    """L3: chunked, rate-limited flush to an external persistent tier
+    (parallel file system / DAOS stand-in).  Chunking bounds the
+    interference window; the backend's phase gate sits between chunks."""
+
+    name = "l3-flush"
+    priority = 40
+
+    def __init__(self, chunk_bytes: int = 4 << 20):
+        self.chunk_bytes = chunk_bytes
+
+    def process(self, ctx):
+        tier = pick_tier(ctx.cluster.external_tiers,
+                         need_persistent=True, need_survives_node=True)
+        key = fmt.shard_key(ctx.name, ctx.version, ctx.rank)
+        limiter = ctx.cluster.rate_limiter
+        gate = ctx.cluster.phase_gate
+        n = len(ctx.shard)
+        if n <= self.chunk_bytes:
+            limiter.acquire(n)
+            tier.put(key, ctx.shard)
+        else:
+            # chunked put: vendor stores with multipart upload would stream;
+            # our tier API is whole-object, so chunks accumulate then publish
+            # (still rate-limited per chunk so interference stays bounded).
+            for off in range(0, n, self.chunk_bytes):
+                limiter.acquire(min(self.chunk_bytes, n - off))
+                if gate is not None:
+                    w = gate()
+                    if w > 0:
+                        time.sleep(min(w, 0.5))
+            tier.put(key, ctx.shard)
+        ctx.results["l3_tier"] = tier.info.name
+        ctx.cluster.note_shard(ctx.name, ctx.version, "L3", ctx.rank, ctx.digest,
+                               meta=ctx.meta)
+        return "ok"
+
+
+class VerifyModule(Module):
+    """Post-write integrity check (reads back from the L1 tier)."""
+
+    name = "verify"
+    priority = 45
+
+    def process(self, ctx):
+        blob = ctx.cluster.fetch_shard(ctx.name, ctx.version, ctx.rank)
+        ok = blob is not None and kops.digest(blob) == ctx.digest
+        ctx.results["verified"] = bool(ok)
+        return "ok" if ok else "error"

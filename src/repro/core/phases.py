@@ -1,0 +1,159 @@
+"""Application-phase prediction for interference-free background I/O
+(paper §2: iterative HPC apps are predictable; schedule background ops into
+windows where they use resources the app does not).
+
+Two predictors over the stream of (step_start, step_end) events the training
+loop reports via ``tick()``:
+
+  EMAPhasePredictor — exponential moving average of step duration + period;
+      predicts the next compute-busy window.
+  GRUPhasePredictor — tiny JAX GRU trained online (SGD) on the normalized
+      duration sequence; the paper's seq2seq-style predictor [6].  Falls
+      back to the EMA until it has enough history.
+
+``idle_wait()`` returns how long a background chunk transfer should wait to
+land inside the predicted gap between steps — used as the ActiveBackend
+phase gate.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class EMAPhasePredictor:
+    def __init__(self, alpha: float = 0.2, clock=time.monotonic):
+        self.alpha = alpha
+        self._clock = clock
+        self.step_dur = None  # busy time within a step
+        self.period = None  # start-to-start
+        self._last_start = None
+        self._last_end = None
+
+    def tick(self, phase: str, t: Optional[float] = None):
+        """phase in {"step_begin", "step_end"}."""
+        t = self._clock() if t is None else t
+        if phase == "step_begin":
+            if self._last_start is not None:
+                p = t - self._last_start
+                self.period = p if self.period is None else \
+                    (1 - self.alpha) * self.period + self.alpha * p
+            self._last_start = t
+        elif phase == "step_end":
+            if self._last_start is not None:
+                d = t - self._last_start
+                self.step_dur = d if self.step_dur is None else \
+                    (1 - self.alpha) * self.step_dur + self.alpha * d
+            self._last_end = t
+
+    def predict_next_duration(self) -> Optional[float]:
+        return self.step_dur
+
+    def idle_wait(self, t: Optional[float] = None) -> float:
+        """Seconds until the next predicted idle (gap) window.  0 = go now."""
+        if None in (self.step_dur, self.period, self._last_start):
+            return 0.0
+        t = self._clock() if t is None else t
+        into = (t - self._last_start) % max(self.period, 1e-9)
+        if into >= self.step_dur:  # already in the gap
+            return 0.0
+        return self.step_dur - into
+
+
+class GRUPhasePredictor(EMAPhasePredictor):
+    """Online GRU forecaster of step durations (ML-based phase prediction)."""
+
+    def __init__(self, hidden: int = 16, window: int = 8, lr: float = 0.05,
+                 replay: int = 6, clock=time.monotonic, seed: int = 0):
+        super().__init__(clock=clock)
+        self.window = window
+        self.hidden = hidden
+        self.lr = lr
+        self.replay = replay
+        self._rng = np.random.default_rng(seed)
+        self._durs: deque[float] = deque(maxlen=256)
+        k = jax.random.PRNGKey(seed)
+        ks = jax.random.split(k, 4)
+        s = 0.5 / np.sqrt(hidden)
+        self.params = {
+            "wz": jax.random.normal(ks[0], (1 + hidden, hidden)) * s,
+            "wr": jax.random.normal(ks[1], (1 + hidden, hidden)) * s,
+            "wh": jax.random.normal(ks[2], (1 + hidden, hidden)) * s,
+            "wo": jax.random.normal(ks[3], (hidden, 1)) * s,
+        }
+        self._train_step = jax.jit(self._make_train_step())
+        self._scale = None
+
+    @staticmethod
+    def _forward(params, seq):
+        h = jnp.zeros((params["wo"].shape[0],))
+
+        def cell(h, x):
+            xi = jnp.concatenate([x[None], h])
+            z = jax.nn.sigmoid(xi @ params["wz"])
+            r = jax.nn.sigmoid(xi @ params["wr"])
+            xi2 = jnp.concatenate([x[None], r * h])
+            cand = jnp.tanh(xi2 @ params["wh"])
+            return (1 - z) * h + z * cand, None
+
+        h, _ = jax.lax.scan(cell, h, seq)
+        return (h @ params["wo"])[0]
+
+    def _make_train_step(self):
+        def loss(params, seq, target):
+            return (self._forward(params, seq) - target) ** 2
+
+        def step(params, seq, target, lr):
+            l, g = jax.value_and_grad(loss)(params, seq, target)
+            params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+            return params, l
+
+        return step
+
+    def tick(self, phase, t=None):
+        before = self.step_dur
+        super().tick(phase, t)
+        if phase == "step_end" and self._last_start is not None:
+            d = (self._clock() if t is None else t) - self._last_start
+            self._durs.append(d)
+            if len(self._durs) > self.window:
+                if self._scale is None:
+                    self._scale = max(np.mean(self._durs), 1e-9)
+                arr = np.asarray(self._durs, np.float32) / self._scale
+                # online step on the newest window + a few replayed windows
+                # (experience replay keeps the tiny GRU converging fast)
+                starts = [len(arr) - self.window - 1]
+                if len(arr) > self.window + 2:
+                    starts += list(self._rng.integers(
+                        0, len(arr) - self.window - 1, size=self.replay))
+                for s in starts:
+                    seq = jnp.asarray(arr[s:s + self.window])
+                    tgt = jnp.asarray(arr[s + self.window])
+                    self.params, _ = self._train_step(self.params, seq, tgt,
+                                                      jnp.float32(self.lr))
+
+    def predict_next_duration(self) -> Optional[float]:
+        if len(self._durs) <= self.window or self._scale is None:
+            return super().predict_next_duration()
+        arr = np.asarray(self._durs, np.float32)[-self.window:]
+        pred = float(self._forward(self.params, jnp.asarray(arr / self._scale)))
+        if not np.isfinite(pred) or pred <= 0:
+            return super().predict_next_duration()
+        return pred * self._scale
+
+    def idle_wait(self, t=None) -> float:
+        if None in (self.period, self._last_start):
+            return 0.0
+        dur = self.predict_next_duration()
+        if dur is None:
+            return 0.0
+        t = self._clock() if t is None else t
+        into = (t - self._last_start) % max(self.period, 1e-9)
+        if into >= dur:
+            return 0.0
+        return dur - into

@@ -1,0 +1,145 @@
+"""Restart: level probing, integrity verification, shard reconstruction and
+elastic re-partitioning.
+
+Priority: newest version first; within a version, L1 local > L2 partner >
+L2 parity-reconstruct > L3 external — the cheapest source that passes
+checksums wins, mirroring VELOC's restart_test/restart_begin semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import erasure
+from repro.core import format as fmt
+
+_LEVEL_ORDER = {"L1": 0, "L2": 1, "L3": 2}
+
+
+def find_restart(cluster, name: str) -> list[dict]:
+    """Candidate (version, best-level) descending by version."""
+    byver: dict[int, dict] = {}
+    for m in cluster.manifests(name):
+        v = m["version"]
+        cur = byver.get(v)
+        if cur is None or _LEVEL_ORDER.get(m["level"], 9) < \
+                _LEVEL_ORDER.get(cur["level"], 9):
+            byver[v] = m
+    return [byver[v] for v in sorted(byver, reverse=True)]
+
+
+def _manifest_for(cluster, name, version) -> Optional[dict]:
+    for m in cluster.manifests(name):
+        if m["version"] == version:
+            return m
+    return None
+
+
+def fetch_shard_any_level(cluster, name: str, version: int, rank: int,
+                          *, distance: int = 1,
+                          expected_digest: Optional[str] = None
+                          ) -> Optional[bytes]:
+    """Shard bytes from the cheapest healthy source."""
+    from repro.kernels import ops as kops
+
+    def ok(blob):
+        if blob is None:
+            return None
+        if expected_digest and kops.digest(blob) != expected_digest:
+            return None
+        return blob
+
+    # L1 / L3 (fetch_shard walks node tiers then external)
+    blob = ok(cluster.fetch_shard(name, version, rank))
+    if blob:
+        return blob
+    # L2a partner copy
+    blob = ok(cluster.fetch_partner_copy(name, version, rank, distance))
+    if blob:
+        return blob
+    # L2b parity reconstruct
+    m = _manifest_for(cluster, name, version)
+    g = (m or {}).get("group_size", 0) or getattr(cluster.cfg, "xor_group", 0)
+    g = min(g, cluster.nranks)
+    if g >= 2:
+        gid, gidx = erasure.group_of(rank, g)
+        payload = cluster.fetch_parity(name, version, gid)
+        if payload is not None:
+            reader = fmt.ShardReader(payload)
+            members = reader.meta["members"]
+            lengths = reader.meta["lengths"]
+            rs = reader.meta.get("rs", 0)
+            survivors = {}
+            missing = []
+            for j, r in enumerate(members):
+                b = cluster.fetch_shard(name, version, r)
+                if b is None and r != rank:
+                    b = cluster.fetch_partner_copy(name, version, r, distance)
+                if b is None:
+                    missing.append(j)
+                else:
+                    survivors[j] = b
+            my_j = members.index(rank)
+            if my_j not in missing:
+                return survivors[my_j]
+            if rs > 0:
+                parities = {j: reader.read(f"parity{j}") .tobytes()
+                            for j in range(rs)}
+                rec = erasure.rs_reconstruct(survivors, parities, len(members),
+                                             missing, max(lengths))
+                return rec[my_j][: lengths[my_j]]
+            if len(missing) == 1:
+                parity = reader.read("parity0").tobytes()
+                return erasure.xor_reconstruct(survivors, parity, len(members),
+                                               my_j, lengths[my_j])
+    return None
+
+
+def load_rank_regions(cluster, name: str, version: int, rank: int,
+                      *, distance: int = 1) -> dict[str, np.ndarray]:
+    """{region_name: array} for one rank, verifying checksums."""
+    m = _manifest_for(cluster, name, version)
+    digest = (m or {}).get("shard_digests", {}).get(rank)
+    blob = fetch_shard_any_level(cluster, name, version, rank,
+                                 distance=distance, expected_digest=digest)
+    if blob is None:
+        raise IOError(f"rank {rank} shard unrecoverable for v{version}")
+    reader = fmt.ShardReader(blob)
+    return {n: reader.read(n) for n in reader.region_names}
+
+
+def load_all_regions(cluster, name: str, version: int, *, distance: int = 1
+                     ) -> dict[int, dict[str, np.ndarray]]:
+    return {r: load_rank_regions(cluster, name, version, r, distance=distance)
+            for r in range(cluster.nranks)}
+
+
+# ---------------------------------------------------------------------------
+# elastic re-partitioning
+# ---------------------------------------------------------------------------
+
+
+def elastic_regions(per_rank: dict[int, dict[str, np.ndarray]],
+                    new_nranks: int) -> dict[int, dict[str, np.ndarray]]:
+    """Re-slice a checkpoint written by N ranks for M ranks.  Regions whose
+    names match across ranks and whose shard metadata marks axis-0 sharding
+    are concatenated and re-split; replicated regions are broadcast."""
+    old = sorted(per_rank)
+    names = list(per_rank[old[0]])
+    out = {r: {} for r in range(new_nranks)}
+    for n in names:
+        arrs = [per_rank[r][n] for r in old]
+        same = all(a.shape == arrs[0].shape and np.array_equal(a, arrs[0])
+                   for a in arrs[1:])
+        if same:
+            for r in range(new_nranks):
+                out[r][n] = arrs[0]
+            continue
+        glob = np.concatenate(arrs, axis=0)
+        assert glob.shape[0] % new_nranks == 0, \
+            f"region {n}: axis0={glob.shape[0]} not divisible by {new_nranks}"
+        piece = glob.shape[0] // new_nranks
+        for r in range(new_nranks):
+            out[r][n] = glob[r * piece:(r + 1) * piece]
+    return out

@@ -1,0 +1,204 @@
+"""Heterogeneous storage-tier abstraction (VELOC §2, "hidden complexity of
+heterogeneous storage").
+
+One put/get API over every tier so upper layers never see vendor APIs:
+
+  DRAMTier  — node-local memory (fastest, volatile; dies with the node)
+  FileTier  — node-local SSD or the external parallel file system (a POSIX
+              directory; Lustre stand-in)
+  KVTier    — key-value object store (DAOS stand-in; the paper's recent
+              DAOS module uses exactly a low-level put/get pair)
+
+Tiers carry nominal bandwidth/persistency metadata used by the tier
+*scheduler* (pick_tier) — faithful to the paper's observation that the
+fastest tier is not always optimal under producer-consumer concurrency
+[IPDPS'19]: a tier busy draining to the next level is deprioritized.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class TierInfo:
+    name: str
+    kind: str  # dram | file | kv
+    gbps: float  # nominal bandwidth
+    persistent: bool  # survives node failure
+    node_local: bool  # dies with the node
+
+
+class StorageTier:
+    info: TierInfo
+
+    def __init__(self, info: TierInfo):
+        self.info = info
+        self._lock = threading.Lock()
+        self._inflight = 0  # concurrent writers (producer-consumer pressure)
+
+    # -- accounting used by pick_tier ------------------------------------
+    def busy(self) -> int:
+        return self._inflight
+
+    def _enter(self):
+        with self._lock:
+            self._inflight += 1
+
+    def _exit(self):
+        with self._lock:
+            self._inflight -= 1
+
+    # -- API --------------------------------------------------------------
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def keys(self, prefix: str = "") -> list[str]:
+        raise NotImplementedError
+
+    def wipe(self) -> None:
+        """Simulate losing this tier (node failure)."""
+        for k in list(self.keys()):
+            self.delete(k)
+
+
+class DRAMTier(StorageTier):
+    def __init__(self, name="dram", gbps=100.0):
+        super().__init__(TierInfo(name, "dram", gbps, persistent=False,
+                                  node_local=True))
+        self._store: dict[str, bytes] = {}
+
+    def put(self, key, data):
+        self._enter()
+        try:
+            self._store[key] = bytes(data)
+        finally:
+            self._exit()
+
+    def get(self, key):
+        return self._store.get(key)
+
+    def exists(self, key):
+        return key in self._store
+
+    def delete(self, key):
+        self._store.pop(key, None)
+
+    def keys(self, prefix=""):
+        return [k for k in self._store if k.startswith(prefix)]
+
+
+class FileTier(StorageTier):
+    def __init__(self, root: str, name="file", gbps=5.0, persistent=True,
+                 node_local=False):
+        super().__init__(TierInfo(name, "file", gbps, persistent, node_local))
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        safe = key.replace("/", "__")
+        return os.path.join(self.root, safe)
+
+    def put(self, key, data):
+        self._enter()
+        try:
+            tmp = self._path(key) + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._path(key))  # atomic publish
+        finally:
+            self._exit()
+
+    def get(self, key):
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            return None
+
+    def exists(self, key):
+        return os.path.exists(self._path(key))
+
+    def delete(self, key):
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def keys(self, prefix=""):
+        safe = prefix.replace("/", "__")
+        return [f.replace("__", "/") for f in os.listdir(self.root)
+                if f.startswith(safe) and not f.endswith(".tmp")]
+
+
+class KVTier(StorageTier):
+    """DAOS stand-in: optimized low-level put/get of key-value pairs, with an
+    optional write-through journal file for persistence across restarts."""
+
+    def __init__(self, name="kv", gbps=20.0, journal: Optional[str] = None):
+        super().__init__(TierInfo(name, "kv", gbps, persistent=journal is not None,
+                                  node_local=False))
+        self._store: dict[str, bytes] = {}
+        self._journal = journal
+        if journal and os.path.isdir(journal):
+            for f in os.listdir(journal):
+                with open(os.path.join(journal, f), "rb") as fh:
+                    self._store[f.replace("__", "/")] = fh.read()
+
+    def put(self, key, data):
+        self._enter()
+        try:
+            self._store[key] = bytes(data)
+            if self._journal:
+                os.makedirs(self._journal, exist_ok=True)
+                p = os.path.join(self._journal, key.replace("/", "__"))
+                with open(p + ".tmp", "wb") as f:
+                    f.write(data)
+                os.replace(p + ".tmp", p)
+        finally:
+            self._exit()
+
+    def get(self, key):
+        return self._store.get(key)
+
+    def exists(self, key):
+        return key in self._store
+
+    def delete(self, key):
+        self._store.pop(key, None)
+        if self._journal:
+            try:
+                os.remove(os.path.join(self._journal, key.replace("/", "__")))
+            except FileNotFoundError:
+                pass
+
+    def keys(self, prefix=""):
+        return [k for k in self._store if k.startswith(prefix)]
+
+
+def pick_tier(tiers: list[StorageTier], *, need_persistent=False,
+              need_survives_node=False) -> StorageTier:
+    """Heterogeneous-tier scheduler: among eligible tiers, prefer the highest
+    *effective* bandwidth = nominal / (1 + inflight writers).  This encodes
+    the paper's producer-consumer observation: a nominally faster tier that
+    is currently draining loses to an idle slower one."""
+    elig = [t for t in tiers
+            if (not need_persistent or t.info.persistent)
+            and (not need_survives_node or not t.info.node_local)]
+    if not elig:
+        raise RuntimeError("no eligible storage tier")
+    return max(elig, key=lambda t: t.info.gbps / (1.0 + t.busy()))

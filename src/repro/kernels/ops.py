@@ -1,0 +1,144 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+Handles arbitrary byte buffers: pad + reshape into kernel tiling, dispatch
+(interpret mode on CPU, compiled on TPU), unpad.  These are the primitives
+the VELOC modules (checksum / compress / erasure-encode) call.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import checksum as _ck
+from repro.kernels import quantize as _qz
+from repro.kernels import xor_parity as _xp
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: np.ndarray | jax.Array, mult: int):
+    n = x.shape[-1]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([jnp.asarray(x), jnp.zeros((pad,), x.dtype)])
+    return jnp.asarray(x), n
+
+
+def bytes_to_u32(buf: bytes | np.ndarray) -> np.ndarray:
+    if isinstance(buf, (bytes, bytearray, memoryview)):
+        a = np.frombuffer(buf, dtype=np.uint8)
+    else:
+        a = np.ascontiguousarray(buf).reshape(-1).view(np.uint8)
+    pad = (-a.size) % 4
+    if pad:
+        a = np.concatenate([a, np.zeros(pad, np.uint8)])
+    return a.view(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# XOR parity
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _xor_reduce_j(x, interpret=True):
+    return _xp.xor_reduce_pallas(x, interpret=interpret)
+
+
+def xor_reduce(x) -> jax.Array:
+    """x: (K, N) uint32 -> (N,) parity (pads N to the tile size)."""
+    x = jnp.asarray(x)
+    K, n = x.shape
+    pad = (-n) % _xp.BLOCK_N
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((K, pad), x.dtype)], axis=1)
+    return _xor_reduce_j(x, interpret=_interpret())[:n]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _xor_pair_j(a, b, interpret=True):
+    return _xp.xor_pair_pallas(a, b, interpret=interpret)
+
+
+def xor_pair(a, b) -> jax.Array:
+    a, n = _pad_to(jnp.asarray(a), _xp.BLOCK_N)
+    b, _ = _pad_to(jnp.asarray(b), _xp.BLOCK_N)
+    return _xor_pair_j(a, b, interpret=_interpret())[:n]
+
+
+# ---------------------------------------------------------------------------
+# checksums
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _checksum_j(x, interpret=True):
+    return _ck.checksum_pallas(x, interpret=interpret)
+
+
+def fletcher_chunks(words: jax.Array | np.ndarray,
+                    chunk: int = _ck.CHUNK_WORDS) -> np.ndarray:
+    """words: (n,) uint32 -> (n_chunks, 2) uint32 per-chunk checksums."""
+    w = jnp.asarray(words)
+    if w.shape[0] == 0:
+        return np.zeros((0, 2), np.uint32)
+    rows = -(-w.shape[0] // chunk)
+    rows_pad = -(-rows // _ck.BLOCK_ROWS) * _ck.BLOCK_ROWS
+    total = rows_pad * chunk
+    if total != w.shape[0]:
+        w = jnp.concatenate([w, jnp.zeros((total - w.shape[0],), jnp.uint32)])
+    out = _checksum_j(w.reshape(rows_pad, chunk), interpret=_interpret())
+    return np.asarray(out[:rows])
+
+
+def digest(buf: bytes | np.ndarray) -> str:
+    """Hex digest of a byte buffer (chunk checksums folded host-side)."""
+    words = bytes_to_u32(buf)
+    chunks = fletcher_chunks(words)
+    h1 = np.bitwise_xor.reduce(chunks[:, 0]) if len(chunks) else np.uint32(0)
+    h2 = np.uint32(np.sum(chunks[:, 1], dtype=np.uint64) & 0xFFFFFFFF)
+    return f"{int(h1):08x}{int(h2):08x}{len(words):08x}"
+
+
+# ---------------------------------------------------------------------------
+# block quantization (compression module)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _quant_j(x, interpret=True):
+    return _qz.quantize_pallas(x, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _dequant_j(q, s, interpret=True):
+    return _qz.dequantize_pallas(q, s, interpret=interpret)
+
+
+def quantize(x: np.ndarray | jax.Array):
+    """x: any-shape float array -> (q int8 flat, scales f32, orig_len, shape)."""
+    shape = tuple(np.asarray(x.shape))
+    flat = jnp.asarray(x).reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    bs = _qz.BLOCK_SIZE
+    rows = -(-n // bs)
+    rows_pad = -(-rows // _qz.BLOCK_ROWS) * _qz.BLOCK_ROWS
+    if rows_pad * bs != n:
+        flat = jnp.concatenate([flat, jnp.zeros((rows_pad * bs - n,), jnp.float32)])
+    q, s = _quant_j(flat.reshape(rows_pad, bs), interpret=_interpret())
+    return np.asarray(q[:rows]), np.asarray(s[:rows]), n, shape
+
+
+def dequantize(q: np.ndarray, scales: np.ndarray, n: int, shape) -> np.ndarray:
+    rows = q.shape[0]
+    rows_pad = -(-rows // _qz.BLOCK_ROWS) * _qz.BLOCK_ROWS
+    if rows_pad != rows:
+        q = np.concatenate([q, np.zeros((rows_pad - rows, q.shape[1]), np.int8)])
+        scales = np.concatenate([scales, np.zeros((rows_pad - rows,), np.float32)])
+    out = _dequant_j(jnp.asarray(q), jnp.asarray(scales), interpret=_interpret())
+    return np.asarray(out).reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested per shape/dtype
+sweep in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xor_reduce_ref(x: jax.Array) -> jax.Array:
+    """x: (K, N) uint32 -> (N,)."""
+    out = x[0]
+    for k in range(1, x.shape[0]):
+        out = out ^ x[k]
+    return out
+
+
+def xor_pair_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a ^ b
+
+
+def checksum_ref(x: jax.Array) -> jax.Array:
+    """x: (n_chunks, chunk) uint32 -> (n_chunks, 2) uint32."""
+    w = (jnp.arange(x.shape[1], dtype=jnp.uint32) + jnp.uint32(1))[None, :]
+    c1 = jnp.sum(x, axis=1, dtype=jnp.uint32)
+    c2 = jnp.sum(x * w, axis=1, dtype=jnp.uint32)
+    return jnp.stack([c1, c2], axis=1)
+
+
+def quantize_ref(x: jax.Array):
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scales[:, None]

@@ -1,0 +1,202 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation) on the production meshes, print
+memory/cost analysis, and dump the roofline record (analysis/hlo.py) to JSON
+for EXPERIMENTS.md §Dry-run / §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k \
+      --variant capture          # DeepFreeze fused-L1 train step
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --variant l2     \
+      --shape train_4k           # device-level L2 ring-XOR encode
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+
+from repro import runtime
+from repro.analysis import hlo as hloa
+from repro.configs.base import SHAPES, get_config, list_configs
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import (batch_specs, batch_struct, cache_init,
+                                cache_specs, init_model, make_decode_fn,
+                                make_prefill_fn, model_flops, model_specs)
+from repro.sharding import pspec_tree, resolve_tree
+from repro.train.steps import (init_train_state, make_train_step,
+                               train_state_specs)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _mem_dict(ma):
+    return {k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes")}
+
+
+def _serving_cfg(cfg):
+    """Inference cells serve bf16 weights without FSDP (weights replicated
+    per model shard — standard serving layout; FSDP would all-gather params
+    every step)."""
+    return cfg.replace(fsdp=False, param_dtype=cfg.compute_dtype)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, variant: str = "base"):
+    """Returns (lowered, compiled, record)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cfg.supports_shape(shape)
+    if not ok:
+        return None, None, {"arch": arch, "shape": shape_name, "skipped": why}
+
+    key = jax.random.PRNGKey(0)
+    n_dev = mesh.size
+    t0 = time.time()
+
+    with runtime.use_mesh(mesh):
+        if shape.kind == "train":
+            state_shapes = jax.eval_shape(lambda: init_train_state(key, cfg))
+            state_sh = resolve_tree(state_shapes, train_state_specs(cfg), mesh,
+                                    cfg.fsdp)
+            bstruct = batch_struct(cfg, shape)
+            b_sh = resolve_tree(bstruct, batch_specs(cfg, shape), mesh, False)
+            if variant == "l2":
+                from repro.core.partner import encode_l2
+
+                pspecs = pspec_tree(state_shapes, train_state_specs(cfg), mesh,
+                                    cfg.fsdp)
+                fn = partial(encode_l2, pspecs=pspecs, mesh=mesh, mode="xor")
+                lowered = jax.jit(fn, in_shardings=(state_sh,)).lower(state_shapes)
+            elif variant == "capture":
+                step = make_train_step(cfg, capture=True)
+                lowered = jax.jit(
+                    step, in_shardings=(state_sh, b_sh),
+                    out_shardings=(state_sh, state_sh, None),
+                    donate_argnums=(0,)).lower(state_shapes, bstruct)
+            else:
+                step = make_train_step(cfg)
+                lowered = jax.jit(
+                    step, in_shardings=(state_sh, b_sh),
+                    out_shardings=(state_sh, None),
+                    donate_argnums=(0,)).lower(state_shapes, bstruct)
+        elif shape.kind == "prefill":
+            cfg = _serving_cfg(cfg)
+            params_shapes = jax.eval_shape(lambda: init_model(key, cfg))
+            p_sh = resolve_tree(params_shapes, model_specs(cfg), mesh, cfg.fsdp)
+            bstruct = batch_struct(cfg, shape)
+            b_sh = resolve_tree(bstruct, batch_specs(cfg, shape), mesh, False)
+            fn = make_prefill_fn(cfg)
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(
+                params_shapes, bstruct)
+        else:  # decode
+            cfg = _serving_cfg(cfg)
+            params_shapes = jax.eval_shape(lambda: init_model(key, cfg))
+            p_sh = resolve_tree(params_shapes, model_specs(cfg), mesh, cfg.fsdp)
+            B, S = shape.global_batch, shape.seq_len
+            cache_shapes = jax.eval_shape(lambda: cache_init(cfg, B, S))
+            c_sh = resolve_tree(cache_shapes, cache_specs(cfg), mesh, False)
+            bstruct = batch_struct(cfg, shape)
+            b_sh = resolve_tree(bstruct, batch_specs(cfg, shape), mesh, False)
+            fn = make_decode_fn(cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, c_sh, b_sh["token"], b_sh["pos"]),
+                out_shardings=(None, c_sh), donate_argnums=(1,)).lower(
+                params_shapes, cache_shapes, bstruct["token"], bstruct["pos"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    costs = hloa.analyze_text(compiled.as_text(), n_dev)
+    mf = model_flops(cfg, shape)
+    roof = hloa.roofline(costs, model_flops_per_device=mf / n_dev)
+    record = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": dict(zip(mesh.axis_names, (int(mesh.shape[a])
+                                           for a in mesh.axis_names))),
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(ma),
+        "cost_analysis": {"flops": float(ca.get("flops", 0.0)),
+                          "bytes": float(ca.get("bytes accessed", 0.0))},
+        "roofline": roof,
+        "model_flops_global": mf,
+    }
+    return lowered, compiled, record
+
+
+def cell_list(archs, shapes):
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            yield a, s, cfg.supports_shape(SHAPES[s])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="base",
+                    choices=["base", "capture", "l2"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = [a for a in list_configs() if a != "veloc-demo-100m"] \
+        if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mtag = "multi" if multi else "single"
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}.{shape}.{mtag}.{args.variant}"
+                out_path = os.path.join(args.out, tag + ".json")
+                try:
+                    _, compiled, rec = lower_cell(arch, shape, mesh,
+                                                  variant=args.variant)
+                    if compiled is None:
+                        n_skip += 1
+                        print(f"[skip] {tag}: {rec['skipped']}")
+                    else:
+                        n_ok += 1
+                        r = rec["roofline"]
+                        print(f"[ok]   {tag}: compile={rec['compile_s']}s "
+                              f"dom={r['dominant']} "
+                              f"comp={r['compute_s']:.4f}s "
+                              f"mem={r['memory_s']:.4f}s "
+                              f"coll={r['collective_s']:.4f}s "
+                              f"useful={r.get('useful_compute_ratio', 0):.2f} "
+                              f"bytes/dev={rec['memory']['argument_size_in_bytes']/1e9:.2f}GB")
+                    with open(out_path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception:
+                    n_fail += 1
+                    print(f"[FAIL] {tag}")
+                    traceback.print_exc()
+                    with open(out_path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape, "mesh": mtag,
+                                   "variant": args.variant,
+                                   "error": traceback.format_exc()}, f)
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

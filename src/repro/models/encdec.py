@@ -1,0 +1,202 @@
+"""Encoder-decoder transformer (whisper-medium backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, T_enc, d_model).  Encoder blocks
+are non-causal full attention; decoder blocks are causal self-attention +
+cross-attention with learned decoder position embeddings.  RoPE is not used
+(whisper predates it); sinusoidal position encodings are added to the frame
+embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+CROSS_LEN = 1500  # whisper native encoder length used for decode cells
+
+
+def _init_enc_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    dt = L.pdt(cfg)
+    return {"norm1": jnp.ones((cfg.d_model,), dt), "attn": L.init_attn(k1, cfg),
+            "norm2": jnp.ones((cfg.d_model,), dt), "mlp": L.init_mlp(k2, cfg)}
+
+
+def _spec_enc_block(cfg):
+    return {"norm1": (None,), "attn": L.spec_attn(cfg),
+            "norm2": (None,), "mlp": L.spec_mlp(cfg)}
+
+
+def _init_dec_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = L.pdt(cfg)
+    return {"norm1": jnp.ones((cfg.d_model,), dt), "self": L.init_attn(k1, cfg),
+            "norm_x": jnp.ones((cfg.d_model,), dt), "cross": L.init_attn(k2, cfg),
+            "norm2": jnp.ones((cfg.d_model,), dt), "mlp": L.init_mlp(k3, cfg)}
+
+
+def _spec_dec_block(cfg):
+    return {"norm1": (None,), "self": L.spec_attn(cfg),
+            "norm_x": (None,), "cross": L.spec_attn(cfg),
+            "norm2": (None,), "mlp": L.spec_mlp(cfg)}
+
+
+def init_encdec(key, cfg):
+    ks = jax.random.split(key, cfg.enc_layers + cfg.num_layers + 3)
+    dt = L.pdt(cfg)
+    enc = [_init_enc_block(ks[i], cfg) for i in range(cfg.enc_layers)]
+    dec = [_init_dec_block(ks[cfg.enc_layers + i], cfg) for i in range(cfg.num_layers)]
+    V = cfg.padded_vocab
+    return {
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "dec_norm": jnp.ones((cfg.d_model,), dt),
+        "tok_emb": L.he(ks[-1], (V, cfg.d_model), dt, fan_in=cfg.d_model),
+        "pos_emb": L.he(ks[-2], (cfg.dec_max_len, cfg.d_model), dt,
+                        fan_in=cfg.d_model),
+        "lm_head": L.he(ks[-3], (cfg.d_model, V), dt),
+    }
+
+
+def spec_encdec(cfg):
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    enc = jax.tree.map(lambda t: (None,) + t, _spec_enc_block(cfg), is_leaf=is_spec)
+    dec = jax.tree.map(lambda t: (None,) + t, _spec_dec_block(cfg), is_leaf=is_spec)
+    return {
+        "enc_blocks": enc, "enc_norm": (None,),
+        "dec_blocks": dec, "dec_norm": (None,),
+        "tok_emb": ("model", "fsdp"), "pos_emb": (None, None),
+        "lm_head": ("fsdp", "model"),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B, T_enc, d) precomputed embeddings (frontend stub)."""
+    ct = L.cdt(cfg)
+    x = frames.astype(ct) + L.sinusoidal_pos(frames.shape[1], cfg.d_model, ct)[None]
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(x, bp):
+        h = L.apply_attn(bp["attn"], cfg, L.rms_norm(x, bp["norm1"]), positions,
+                         causal=False, use_rope=False)
+        x = x + h
+        return x + L.apply_mlp(bp["mlp"], cfg, L.rms_norm(x, bp["norm2"])), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_norm"])
+
+
+def _dec_logits(params, cfg, x):
+    x = L.rms_norm(x, params["dec_norm"])
+    logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    V = cfg.padded_vocab
+    if V != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(V) < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def decode_train(params, cfg, tokens, enc_out):
+    """Teacher-forced decoder.  tokens: (B, T_dec)."""
+    ct = L.cdt(cfg)
+    B, T = tokens.shape
+    x = params["tok_emb"][tokens].astype(ct) + params["pos_emb"][:T].astype(ct)[None]
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(x, bp):
+        h = L.apply_attn(bp["self"], cfg, L.rms_norm(x, bp["norm1"]), positions,
+                         causal=True, use_rope=False)
+        x = x + h
+        ek, ev = L.cross_kv(bp["cross"], cfg, enc_out)
+        x = x + L.apply_cross_attn(bp["cross"], cfg, L.rms_norm(x, bp["norm_x"]),
+                                   ek, ev)
+        return x + L.apply_mlp(bp["mlp"], cfg, L.rms_norm(x, bp["norm2"])), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return _dec_logits(params, cfg, x)
+
+
+def encdec_loss(params, cfg, batch):
+    enc_out = encode(params, cfg, batch["frames"])
+    logits = decode_train(params, cfg, batch["tokens"], enc_out)
+    pred, targets = logits[:, :-1], batch["tokens"][:, 1:]
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def encdec_prefill(params, cfg, batch):
+    """Encoder forward + decoder prefill -> (last_logits, cache)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    ct = L.cdt(cfg)
+    B, T = tokens.shape
+    x = params["tok_emb"][tokens].astype(ct) + params["pos_emb"][:T].astype(ct)[None]
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(x, bp):
+        xn = L.rms_norm(x, bp["norm1"])
+        h = L.apply_attn(bp["self"], cfg, xn, positions, causal=True, use_rope=False)
+        k = jnp.einsum("btd,dgk->btgk", xn.astype(ct), bp["self"]["wk"].astype(ct))
+        v = jnp.einsum("btd,dgk->btgk", xn.astype(ct), bp["self"]["wv"].astype(ct))
+        x = x + h
+        ek, ev = L.cross_kv(bp["cross"], cfg, enc_out)
+        x = x + L.apply_cross_attn(bp["cross"], cfg, L.rms_norm(x, bp["norm_x"]),
+                                   ek, ev)
+        x = x + L.apply_mlp(bp["mlp"], cfg, L.rms_norm(x, bp["norm2"]))
+        return x, {"k": k, "v": v, "cross_k": ek, "cross_v": ev}
+
+    x, cache = jax.lax.scan(body, x, params["dec_blocks"])
+    return _dec_logits(params, cfg, x[:, -1:])[:, 0], cache
+
+
+def encdec_cache_init(cfg, B, S):
+    ct = jnp.dtype(cfg.compute_dtype)
+    Ld, K, hd, H = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    return {
+        "k": jnp.zeros((Ld, B, S, K, hd), ct),
+        "v": jnp.zeros((Ld, B, S, K, hd), ct),
+        "cross_k": jnp.zeros((Ld, B, CROSS_LEN, H, hd), ct),
+        "cross_v": jnp.zeros((Ld, B, CROSS_LEN, H, hd), ct),
+    }
+
+
+def encdec_cache_spec(cfg):
+    return {
+        "k": (None, "batch", "seq", None, None),
+        "v": (None, "batch", "seq", None, None),
+        "cross_k": (None, "batch", "seq", None, None),
+        "cross_v": (None, "batch", "seq", None, None),
+    }
+
+
+def encdec_decode_step(params, cfg, cache, token, pos):
+    """token: (B,1); cache from encdec_cache_init. Returns (logits, cache)."""
+    ct = L.cdt(cfg)
+    B = token.shape[0]
+    pos_c = jnp.clip(pos, 0, cfg.dec_max_len - 1)
+    x = params["tok_emb"][token].astype(ct) + params["pos_emb"][pos_c][None, None]
+
+    def body(x, scans):
+        bp, c = scans
+        xn = L.rms_norm(x, bp["norm1"])
+        # self-attention against the running cache (no rope: positions are
+        # encoded additively, so the cached keys need no rotation)
+        h, ck, cv = L.attn_decode(bp["self"], cfg, xn, c["k"], c["v"], pos,
+                                  use_rope=False)
+        x = x + h
+        x = x + L.apply_cross_attn(bp["cross"], cfg, L.rms_norm(x, bp["norm_x"]),
+                                   c["cross_k"].astype(ct), c["cross_v"].astype(ct))
+        x = x + L.apply_mlp(bp["mlp"], cfg, L.rms_norm(x, bp["norm2"]))
+        return x, {"k": ck, "v": cv, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    return _dec_logits(params, cfg, x)[:, 0], new_cache

@@ -1,0 +1,179 @@
+"""Model dispatch: one API over all assigned architectures.
+
+  init_model / model_specs          params + logical sharding specs
+  make_loss_fn                      (params, batch) -> scalar loss
+  make_prefill_fn                   (params, batch) -> (last_logits, cache)
+  make_decode_fn                    (params, cache, token, pos) -> (logits, cache)
+  cache_init / cache_specs          decode cache construction
+  input_specs                       ShapeDtypeStruct stand-ins per shape cell
+  count_params                      exact param counts (total / active / expert)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+
+IS_SPEC = lambda x: isinstance(x, tuple) and all(
+    isinstance(e, (str, type(None))) for e in x)
+
+
+def init_model(key, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return ED.init_encdec(key, cfg)
+    return TF.init_lm(key, cfg)
+
+
+def model_specs(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return ED.spec_encdec(cfg)
+    return TF.spec_lm(cfg)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return lambda params, batch: ED.encdec_loss(params, cfg, batch)
+    return lambda params, batch: TF.lm_loss(params, cfg, batch)
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return lambda params, batch: ED.encdec_prefill(params, cfg, batch)
+
+    def prefill(params, batch):
+        return TF.lm_prefill(params, cfg, batch["tokens"],
+                             extra_embeds=batch.get("patches"))
+
+    return prefill
+
+
+def make_decode_fn(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return lambda params, cache, token, pos: ED.encdec_decode_step(
+            params, cfg, cache, token, pos)
+    return lambda params, cache, token, pos: TF.lm_decode_step(
+        params, cfg, cache, token, pos)
+
+
+def cache_init(cfg: ModelConfig, B: int, S: int):
+    if cfg.is_encoder_decoder:
+        return ED.encdec_cache_init(cfg, B, S)
+    return TF.lm_cache_init(cfg, B, S)
+
+
+def cache_specs(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return ED.encdec_cache_spec(cfg)
+    return TF.lm_cache_spec(cfg)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation) per shape cell
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeCfg, kind: str | None = None):
+    """Input ShapeDtypeStructs for a cell.  kind defaults to shape.kind.
+
+    train/prefill: token batch (+frames/patches for the stub frontends);
+    decode: (token, pos) — the cache is built separately via cache_init.
+    """
+    kind = kind or shape.kind
+    B, T = shape.global_batch, shape.seq_len
+    ct = jnp.dtype(cfg.compute_dtype)
+    f32 = jnp.dtype("float32")
+    i32 = jnp.dtype("int32")
+    S = jax.ShapeDtypeStruct
+
+    if kind == "decode":
+        return {"token": S((B, 1), i32), "pos": S((), i32)}
+
+    if cfg.is_encoder_decoder:
+        # frontend stub: precomputed frame embeddings; decoder teacher tokens
+        Td = min(cfg.dec_max_len, T)
+        return {"frames": S((B, T, cfg.d_model), ct), "tokens": S((B, Td), i32)}
+    if cfg.frontend == "vision":
+        P = cfg.num_patches
+        return {"tokens": S((B, T - P), i32),
+                "patches": S((B, P, cfg.d_model), ct)}
+    return {"tokens": S((B, T), i32)}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCfg, kind: str | None = None):
+    """Logical sharding specs matching batch_struct."""
+    kind = kind or shape.kind
+    if kind == "decode":
+        return {"token": ("batch", None), "pos": ()}
+    if cfg.is_encoder_decoder:
+        return {"frames": ("batch", None, None), "tokens": ("batch", None)}
+    if cfg.frontend == "vision":
+        return {"tokens": ("batch", None), "patches": ("batch", None, None)}
+    return {"tokens": ("batch", None)}
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeCfg, seed: int = 0,
+               kind: str | None = None):
+    """Concrete random batch matching batch_struct (smoke tests / demos)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, s in batch_struct(cfg, shape, kind).items():
+        if np.issubdtype(s.dtype, np.integer):
+            hi = cfg.vocab_size if name in ("tokens", "token") else max(
+                1, shape.seq_len - 1)
+            if name == "pos":
+                out[name] = jnp.asarray(rng.integers(0, hi), s.dtype)
+            else:
+                out[name] = jnp.asarray(
+                    rng.integers(0, hi, size=s.shape), s.dtype)
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(s.shape) * 0.02, s.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# exact parameter counting (via eval_shape — zero allocation, 1T-safe)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig) -> dict:
+    shapes = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    leaves_with_path = jax.tree_util.tree_leaves_with_path(shapes)
+    total = 0
+    expert = 0
+    embed = 0
+    for path, leaf in leaves_with_path:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(p) for p in path)
+        if "w_gate" in keys or "w_up" in keys or "w_down" in keys:
+            if cfg.moe is not None and leaf.ndim >= 3:
+                expert += n
+        if "emb" in keys or "lm_head" in keys:
+            embed += n
+    active = total - expert
+    if cfg.moe is not None and expert:
+        active += int(expert * cfg.moe.experts_per_token / cfg.moe.num_experts)
+    return {"total": total, "active": active, "expert": expert, "embed": embed}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeCfg, kind: str | None = None) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed.
+    Decode processes global_batch tokens per step."""
+    kind = kind or shape.kind
+    counts = count_params(cfg)
+    n = counts["active"] - counts["embed"]  # standard non-embedding convention
+    if kind == "decode":
+        D = shape.global_batch
+    elif cfg.is_encoder_decoder:
+        D = shape.global_batch * (shape.seq_len + min(cfg.dec_max_len, shape.seq_len))
+    else:
+        D = shape.global_batch * shape.seq_len
+    mult = 6 if kind == "train" else 2
+    return float(mult * n * D)

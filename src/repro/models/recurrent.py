@@ -1,0 +1,457 @@
+"""Recurrent blocks: xLSTM (mLSTM chunkwise-parallel + sLSTM) and RG-LRU.
+
+The mLSTM uses the stabilized chunkwise-parallel form (linear-attention
+chunking with exponential gating) for training/prefill and a one-step
+recurrence for decode; ``mlstm_recurrent`` is the slow exact reference used
+by the equivalence tests.  The RG-LRU uses ``jax.lax.associative_scan``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import cdt, he, pdt, rms_norm
+
+MLSTM_CHUNK = 256
+NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM cell
+# ===========================================================================
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, carry):
+    """One chunk.  q,k,v: (B,H,c,hd); log_i/log_f: (B,H,c);
+    carry = (C (B,H,hd,hd), n (B,H,hd), m (B,H)).  Returns (h, new_carry)."""
+    B, H, c, hd = q.shape
+    C_prev, n_prev, m_prev = carry
+    b = jnp.cumsum(log_f, axis=-1)  # (B,H,c) inclusive
+    # decay from s to t (s<=t): b_t - b_s + log_i_s
+    d = b[..., :, None] - b[..., None, :] + log_i[..., None, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    d = jnp.where(tri, d, NEG)
+    a = b + m_prev[..., None]  # (B,H,c) carry weight in log space
+    m_t = jnp.maximum(a, jnp.max(d, axis=-1))  # (B,H,c)
+
+    S = jnp.einsum("bhtd,bhsd->bhts", q, k) * jnp.exp(d - m_t[..., None])
+    inter = jnp.exp(a - m_t)[..., None] * jnp.einsum("bhtd,bhde->bhte", q, C_prev)
+    num = inter + jnp.einsum("bhts,bhse->bhte", S, v)
+    denom = (jnp.exp(a - m_t) * jnp.einsum("bhtd,bhd->bht", q, n_prev)
+             + jnp.sum(S, axis=-1))
+    h = num / jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))[..., None]
+
+    # end-of-chunk state
+    b_end = b[..., -1]  # (B,H)
+    g = b_end[..., None] - b + log_i  # (B,H,c)
+    m_new = jnp.maximum(b_end + m_prev, jnp.max(g, axis=-1))
+    w_carry = jnp.exp(b_end + m_prev - m_new)
+    w_in = jnp.exp(g - m_new[..., None])
+    C_new = (w_carry[..., None, None] * C_prev
+             + jnp.einsum("bhs,bhsd,bhse->bhde", w_in, k, v))
+    n_new = w_carry[..., None] * n_prev + jnp.einsum("bhs,bhsd->bhd", w_in, k)
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, carry=None, chunk=MLSTM_CHUNK):
+    """q,k,v: (B,T,H,hd); gates: (B,T,H).  Returns (h (B,T,H,hd), carry)."""
+    B, T, H, hd = q.shape
+    k = k / math.sqrt(hd)
+    if carry is None:
+        carry = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                 jnp.zeros((B, H, hd), jnp.float32),
+                 jnp.full((B, H), -jnp.inf, jnp.float32))
+    c = min(chunk, T)
+    assert T % c == 0, (T, c)
+    nc = T // c
+
+    def to_chunks(x):  # (B,T,H,...) -> (nc,B,H,c,...)
+        x = x.reshape((B, nc, c) + x.shape[2:])
+        perm = (1, 0) + tuple(range(3, x.ndim)) + (2,)
+        # (B,nc,c,H,...) -> (nc,B,H,...,c) is awkward; do it explicitly:
+        x = jnp.moveaxis(x, 3, 2)  # (B,nc,H,c,...)
+        return jnp.moveaxis(x, 0, 1)  # (nc,B,H,c,...)
+
+    qs, ks, vs = map(to_chunks, (q.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32)))
+    lis, lfs = map(to_chunks, (log_i.astype(jnp.float32), log_f.astype(jnp.float32)))
+
+    def body(carry, xs):
+        qi, ki, vi, li, lf = xs
+        h, carry = _mlstm_chunk(qi, ki, vi, li, lf, carry)
+        return carry, h
+
+    carry, hs = jax.lax.scan(body, carry, (qs, ks, vs, lis, lfs))
+    # hs: (nc,B,H,c,hd) -> (B,T,H,hd)
+    hs = jnp.moveaxis(hs, 0, 1)  # (B,nc,H,c,hd)
+    hs = jnp.moveaxis(hs, 2, 3).reshape(B, T, H, hd)
+    return hs.astype(q.dtype), carry
+
+
+def mlstm_step(q, k, v, log_i, log_f, carry):
+    """Single decode step.  q,k,v: (B,H,hd); gates (B,H)."""
+    C_prev, n_prev, m_prev = carry
+    hd = q.shape[-1]
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32) / math.sqrt(hd)
+    v = v.astype(jnp.float32)
+    m_t = jnp.maximum(log_f + m_prev, log_i)
+    f = jnp.exp(log_f + m_prev - m_t)
+    i = jnp.exp(log_i - m_t)
+    C = f[..., None, None] * C_prev + i[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = f[..., None] * n_prev + i[..., None] * k
+    denom = jnp.einsum("bhd,bhd->bh", q, n)
+    h = jnp.einsum("bhd,bhde->bhe", q, C) / jnp.maximum(
+        jnp.abs(denom), jnp.exp(-m_t))[..., None]
+    return h, (C, n, m_t)
+
+
+def mlstm_recurrent(q, k, v, log_i, log_f, carry=None):
+    """Exact sequential reference (tests only).  Shapes as mlstm_chunkwise."""
+    B, T, H, hd = q.shape
+    if carry is None:
+        carry = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                 jnp.zeros((B, H, hd), jnp.float32),
+                 jnp.full((B, H), -jnp.inf, jnp.float32))
+
+    def body(carry, xs):
+        qt, kt, vt, li, lf = xs
+        h, carry = mlstm_step(qt, kt, vt, li, lf, carry)
+        return carry, h
+
+    xs = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(log_i.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(log_f.astype(jnp.float32), 1, 0))
+    carry, hs = jax.lax.scan(body, carry, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), carry
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (up-proj 2x, per-head q/k projections, v identity, gated out)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key, cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    di = 2 * d
+    hd = di // H
+    ks = jax.random.split(key, 7)
+    dt = pdt(cfg)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "w_up": he(ks[0], (d, di), dt),
+        "w_z": he(ks[1], (d, di), dt),
+        "wq": he(ks[2], (H, hd, hd), dt, fan_in=hd),
+        "wk": he(ks[3], (H, hd, hd), dt, fan_in=hd),
+        "w_gates": he(ks[4], (di, 2 * H), dt) ,
+        "b_gates": jnp.concatenate([jnp.zeros((H,)), jnp.ones((H,)) * 3.0]).astype(dt),
+        "gn": jnp.ones((di,), dt),
+        "w_down": he(ks[5], (di, d), dt, fan_in=di),
+    }
+
+
+def spec_mlstm_block(cfg):
+    return {
+        "norm": (None,),
+        "w_up": ("fsdp", "model"),
+        "w_z": ("fsdp", "model"),
+        "wq": (None, None, None),
+        "wk": (None, None, None),
+        "w_gates": ("model", None),
+        "b_gates": (None,),
+        "gn": (None,),
+        "w_down": ("model", "fsdp"),
+    }
+
+
+def _mlstm_qkvg(p, cfg, x):
+    ct = cdt(cfg)
+    B, T, d = x.shape
+    H = cfg.num_heads
+    di = 2 * d
+    hd = di // H
+    xn = rms_norm(x, p["norm"])
+    u = xn @ p["w_up"].astype(ct)  # (B,T,di)
+    z = xn @ p["w_z"].astype(ct)
+    uh = u.reshape(B, T, H, hd)
+    q = jnp.einsum("bthi,hij->bthj", uh, p["wq"].astype(ct))
+    k = jnp.einsum("bthi,hij->bthj", uh, p["wk"].astype(ct))
+    v = uh
+    raw = u @ p["w_gates"].astype(ct) + p["b_gates"].astype(ct)  # (B,T,2H)
+    log_i = raw[..., :H].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(raw[..., H:].astype(jnp.float32))
+    return q, k, v, log_i, log_f, z
+
+
+def apply_mlstm_block(p, cfg, x, carry=None, return_carry=False):
+    ct = cdt(cfg)
+    x = x.astype(ct)
+    B, T, d = x.shape
+    q, k, v, log_i, log_f, z = _mlstm_qkvg(p, cfg, x)
+    h, carry = mlstm_chunkwise(q, k, v, log_i, log_f, carry)
+    h = h.reshape(B, T, -1)
+    h = rms_norm(h, p["gn"])
+    out = (h * jax.nn.silu(z)) @ p["w_down"].astype(ct)
+    if return_carry:
+        return x + out, carry
+    return x + out
+
+
+def mlstm_block_step(p, cfg, x, carry):
+    """x: (B,1,d) decode step."""
+    ct = cdt(cfg)
+    x = x.astype(ct)
+    q, k, v, log_i, log_f, z = _mlstm_qkvg(p, cfg, x)
+    h, carry = mlstm_step(q[:, 0].astype(jnp.float32),
+                          k[:, 0].astype(jnp.float32) / 1.0,
+                          v[:, 0].astype(jnp.float32),
+                          log_i[:, 0], log_f[:, 0], carry)
+    # NB: mlstm_step scales k internally
+    h = h.reshape(x.shape[0], 1, -1).astype(ct)
+    h = rms_norm(h, p["gn"])
+    out = (h * jax.nn.silu(z)) @ p["w_down"].astype(ct)
+    return x + out, carry
+
+
+def mlstm_carry_init(cfg, B):
+    H = cfg.num_heads
+    hd = 2 * cfg.d_model // H
+    return (jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), -jnp.inf, jnp.float32))
+
+
+# ===========================================================================
+# sLSTM block (sequential scan; block-diagonal recurrence per head)
+# ===========================================================================
+
+
+def init_slstm_block(key, cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    f_ff = max(128, int(math.ceil(4 * d / 3 / 128)) * 128)
+    ks = jax.random.split(key, 6)
+    dt = pdt(cfg)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "W": he(ks[0], (d, 4, H, hd), dt, fan_in=d),
+        "R": he(ks[1], (4, H, hd, hd), dt, fan_in=hd),
+        "b": jnp.zeros((4, H, hd), dt),
+        "gn": jnp.ones((d,), dt),
+        "norm2": jnp.ones((d,), dt),
+        "w_ff1": he(ks[2], (d, f_ff), dt),
+        "w_ff2": he(ks[3], (d, f_ff), dt),
+        "w_ff3": he(ks[4], (f_ff, d), dt, fan_in=f_ff),
+    }
+
+
+def spec_slstm_block(cfg):
+    # W/R output-shard the per-head hd dim over "model": the cell state and
+    # its per-timestep gradient accumulators then live hd-sharded, so the
+    # residual per-step collectives are KB-sized stat reductions
+    return {
+        "norm": (None,), "W": ("fsdp", None, None, "model"),
+        "R": (None, None, None, "model"), "b": (None, None, "model"),
+        "gn": (None,), "norm2": (None,),
+        "w_ff1": ("fsdp", "model"), "w_ff2": ("fsdp", "model"),
+        "w_ff3": ("model", "fsdp"),
+    }
+
+
+def _slstm_cell_step(p_W_R_b, xt, state):
+    """xt: (B,d) pre-normed; state: (c,n,h,m) each (B,H,hd)/(B,H,hd)."""
+    W, R, b = p_W_R_b
+    c, n, h, m = state
+    raw = (jnp.einsum("bd,dghk->bghk", xt, W)
+           + jnp.einsum("bhj,ghjk->bghk", h, R) + b)  # (B,4,H,hd)
+    raw = raw.astype(jnp.float32)
+    z = jnp.tanh(raw[:, 0])
+    log_i = raw[:, 1]
+    log_f = jax.nn.log_sigmoid(raw[:, 2])
+    o = jax.nn.sigmoid(raw[:, 3])
+    m_t = jnp.maximum(log_f + m, log_i)
+    fp = jnp.exp(log_f + m - m_t)
+    ip = jnp.exp(log_i - m_t)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h_new = o * c / jnp.maximum(jnp.abs(n), 1e-6)
+    return (c, n, h_new.astype(xt.dtype), m_t), h_new
+
+
+def slstm_carry_init(cfg, B):
+    H, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    z = jnp.zeros((B, H, hd), jnp.float32)
+    return (z, z, z.astype(jnp.dtype(cfg.compute_dtype)),
+            jnp.full((B, H, hd), -jnp.inf, jnp.float32))
+
+
+def _slstm_rec_step(R, b, x_proj_t, state):
+    """One recurrence step from a precomputed input projection.
+    x_proj_t: (B,4,H,hd); state as in _slstm_cell_step."""
+    c, n, h, m = state
+    raw = (x_proj_t + jnp.einsum("bhj,ghjk->bghk", h, R) + b).astype(jnp.float32)
+    z = jnp.tanh(raw[:, 0])
+    log_i = raw[:, 1]
+    log_f = jax.nn.log_sigmoid(raw[:, 2])
+    o = jax.nn.sigmoid(raw[:, 3])
+    m_t = jnp.maximum(log_f + m, log_i)
+    fp = jnp.exp(log_f + m - m_t)
+    ip = jnp.exp(log_i - m_t)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h_new = o * c / jnp.maximum(jnp.abs(n), 1e-6)
+    return (c, n, h_new.astype(x_proj_t.dtype), m_t), h_new
+
+
+def apply_slstm_block(p, cfg, x, carry=None, return_carry=False):
+    ct = cdt(cfg)
+    x = x.astype(ct)
+    B, T, d = x.shape
+    if carry is None:
+        carry = slstm_carry_init(cfg, B)
+    xn = rms_norm(x, p["norm"])
+    # input projection hoisted OUT of the time scan: its dW is then one
+    # einsum-transpose (a single grad all-reduce) instead of a per-timestep
+    # all-reduce of the full partial dW inside the backward scan (GSPMD
+    # emitted 67 MB x T x layers of link traffic for it — the dominant
+    # collective of xlstm train_4k by 20x; see EXPERIMENTS.md §Perf)
+    x_proj = jnp.einsum("btd,dghk->btghk", xn, p["W"].astype(ct))
+    R, b = p["R"].astype(ct), p["b"].astype(ct)
+
+    def body(state, xt):
+        state, h = _slstm_rec_step(R, b, xt, state)
+        return state, h
+
+    carry, hs = jax.lax.scan(body, carry, jnp.moveaxis(x_proj, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, T, d).astype(ct)
+    x = x + rms_norm(hs, p["gn"])
+    # pf-4/3 gated FFN
+    xn2 = rms_norm(x, p["norm2"])
+    hf = jax.nn.gelu(xn2 @ p["w_ff1"].astype(ct), approximate=True) * (
+        xn2 @ p["w_ff2"].astype(ct))
+    x = x + hf @ p["w_ff3"].astype(ct)
+    if return_carry:
+        return x, carry
+    return x
+
+
+def slstm_block_step(p, cfg, x, carry):
+    ct = cdt(cfg)
+    x = x.astype(ct)
+    B = x.shape[0]
+    xn = rms_norm(x, p["norm"])
+    Wrb = (p["W"].astype(ct), p["R"].astype(ct), p["b"].astype(ct))
+    carry, h = _slstm_cell_step(Wrb, xn[:, 0], carry)
+    hs = h.reshape(B, 1, -1).astype(ct)
+    x = x + rms_norm(hs, p["gn"])
+    xn2 = rms_norm(x, p["norm2"])
+    hf = jax.nn.gelu(xn2 @ p["w_ff1"].astype(ct), approximate=True) * (
+        xn2 @ p["w_ff2"].astype(ct))
+    return x + hf @ p["w_ff3"].astype(ct), carry
+
+
+# ===========================================================================
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ===========================================================================
+
+RGLRU_C = 8.0
+
+
+def init_rglru_block(key, cfg):
+    d, w = cfg.d_model, cfg.lru_width
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    dt = pdt(cfg)
+    # Lambda init so a = exp(-8*softplus(lam)*r) spans ~(0.9, 0.999)
+    lam = jax.random.uniform(ks[6], (w,), minval=-4.3, maxval=-2.0)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "w_x": he(ks[0], (d, w), dt),
+        "w_gate": he(ks[1], (d, w), dt),
+        "conv_w": he(ks[2], (cw, w), dt, fan_in=cw),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_r": he(ks[3], (w, w), dt),
+        "b_r": jnp.zeros((w,), dt),
+        "w_i": he(ks[4], (w, w), dt),
+        "b_i": jnp.zeros((w,), dt),
+        "lam": lam.astype(jnp.float32),
+        "w_out": he(ks[5], (w, d), dt, fan_in=w),
+    }
+
+
+def spec_rglru_block(cfg):
+    return {
+        "norm": (None,), "w_x": ("fsdp", "model"), "w_gate": ("fsdp", "model"),
+        "conv_w": (None, "model"), "conv_b": ("model",),
+        "w_r": (None, "model"), "b_r": ("model",),
+        "w_i": (None, "model"), "b_i": ("model",),
+        "lam": ("model",), "w_out": ("model", "fsdp"),
+    }
+
+
+def _causal_conv(x, w, b, carry=None):
+    """x: (B,T,w); w: (cw, width).  carry: (B,cw-1,width) prior inputs."""
+    cw = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros(x.shape[:1] + (cw - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, j:j + x.shape[1]] * w[cw - 1 - j] for j in range(cw))
+    new_carry = xp[:, -(cw - 1):] if cw > 1 else None
+    return out + b, new_carry
+
+
+def _rglru_gates(p, xc):
+    r = jax.nn.sigmoid((xc @ p["w_r"] + p["b_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xc @ p["w_i"] + p["b_i"]).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * xc.astype(jnp.float32))
+
+
+def apply_rglru_block(p, cfg, x, carry=None, return_carry=False):
+    """carry = {"h": (B,w), "conv": (B,cw-1,w)}"""
+    ct = cdt(cfg)
+    x = x.astype(ct)
+    B, T, d = x.shape
+    xn = rms_norm(x, p["norm"])
+    xb = xn @ p["w_x"].astype(ct)
+    gate = jax.nn.gelu(xn @ p["w_gate"].astype(ct), approximate=True)
+    xc, conv_carry = _causal_conv(xb, p["conv_w"].astype(ct), p["conv_b"].astype(ct),
+                                  None if carry is None else carry["conv"])
+    a, bterm = _rglru_gates(p, xc)
+    if carry is not None:
+        bterm = bterm.at[:, 0].add(a[:, 0] * carry["h"].astype(jnp.float32))
+    aa, bb = jax.lax.associative_scan(
+        lambda l, r: (r[0] * l[0], r[0] * l[1] + r[1]), (a, bterm), axis=1)
+    h = bb.astype(ct)
+    out = (h * gate) @ p["w_out"].astype(ct)
+    if return_carry:
+        return x + out, {"h": bb[:, -1], "conv": conv_carry}
+    return x + out
+
+
+def rglru_block_step(p, cfg, x, carry):
+    ct = cdt(cfg)
+    x = x.astype(ct)
+    xn = rms_norm(x, p["norm"])
+    xb = xn @ p["w_x"].astype(ct)
+    gate = jax.nn.gelu(xn @ p["w_gate"].astype(ct), approximate=True)
+    xc, conv_carry = _causal_conv(xb, p["conv_w"].astype(ct), p["conv_b"].astype(ct),
+                                  carry["conv"])
+    a, bterm = _rglru_gates(p, xc)
+    h_new = a[:, 0] * carry["h"].astype(jnp.float32) + bterm[:, 0]
+    out = (h_new[:, None].astype(ct) * gate) @ p["w_out"].astype(ct)
+    return x + out, {"h": h_new, "conv": conv_carry}
+
+
+def rglru_carry_init(cfg, B):
+    return {"h": jnp.zeros((B, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.lru_width), jnp.float32)}

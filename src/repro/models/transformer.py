@@ -1,0 +1,441 @@
+"""Decoder-only LM assembled from a block pattern, scanned over layer groups.
+
+The layer stack is ``cfg.block_pattern`` cycled; ``num_layers // P`` full
+groups are executed under ``jax.lax.scan`` over stacked params (keeps HLO
+small — crucial for 512-device SPMD compiles) and the ``num_layers % P``
+remainder layers run unrolled (e.g. recurrentgemma's 26 = 8*3 + 2).
+
+Supports dense/GQA ("attn"), windowed ("local_attn"), MLA ("mla"),
+xLSTM ("mlstm"/"slstm") and RG-LRU ("rglru") blocks; the FFN half of
+attention-style blocks is either a dense MLP or the MoE layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import jax.numpy as jnp  # noqa: F811  (re-export convenience)
+
+from repro import runtime
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import recurrent as R
+
+
+def _constrain(x, *spec):
+    """with_sharding_constraint against the ambient mesh (no-op without)."""
+    mesh = runtime.get_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    from repro.sharding import resolve_spec
+
+    ps = resolve_spec(x.shape, spec, mesh, fsdp=False)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))
+
+
+def gather_fsdp(params, specs):
+    """Explicit ZeRO-3 all-gather of one layer's FSDP-sharded params.
+
+    Inside the layer scan, constrain each param leaf to its spec with the
+    "fsdp" dims dropped: XLA inserts the per-layer all-gather right before
+    use.  Without this, a contraction over an fsdp-sharded d_model dim bates
+    the partitioner into partial-sum activations — a catastrophic full-size
+    activation all-reduce per matmul (measured: 14x collective bytes on
+    yi-9b; see EXPERIMENTS.md §Perf)."""
+    mesh = runtime.get_mesh()
+    if mesh is None:
+        return params
+    from jax.sharding import NamedSharding
+    from repro.sharding import _map_up_to, resolve_spec
+
+    def one(leaf, spec):
+        ps = resolve_spec(leaf.shape, spec, mesh, fsdp=False)
+        return jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, ps))
+
+    return _map_up_to(params, specs, one)
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+_MIX_SELF_CONTAINED = {"mlstm", "slstm"}
+
+
+def _ffn_init(key, cfg):
+    if cfg.moe is not None:
+        return MOE.init_moe(key, cfg)
+    return L.init_mlp(key, cfg)
+
+
+def _ffn_spec(cfg):
+    if cfg.moe is not None:
+        return MOE.spec_moe(cfg)
+    return L.spec_mlp(cfg)
+
+
+def _ffn_apply(p, cfg, x):
+    if cfg.moe is not None:
+        return MOE.apply_moe(p, cfg, x)
+    return L.apply_mlp(p, cfg, x)
+
+
+def init_block(key, cfg, kind: str):
+    k1, k2 = jax.random.split(key)
+    dt = L.pdt(cfg)
+    if kind in ("attn", "local_attn"):
+        return {"norm1": jnp.ones((cfg.d_model,), dt), "mix": L.init_attn(k1, cfg),
+                "norm2": jnp.ones((cfg.d_model,), dt), "ffn": _ffn_init(k2, cfg)}
+    if kind == "mla":
+        return {"norm1": jnp.ones((cfg.d_model,), dt), "mix": L.init_mla(k1, cfg),
+                "norm2": jnp.ones((cfg.d_model,), dt), "ffn": _ffn_init(k2, cfg)}
+    if kind == "mlstm":
+        return R.init_mlstm_block(k1, cfg)
+    if kind == "slstm":
+        return R.init_slstm_block(k1, cfg)
+    if kind == "rglru":
+        return {"mix": R.init_rglru_block(k1, cfg),
+                "norm2": jnp.ones((cfg.d_model,), dt), "ffn": _ffn_init(k2, cfg)}
+    raise ValueError(kind)
+
+
+def spec_block(cfg, kind: str):
+    if kind in ("attn", "local_attn"):
+        return {"norm1": (None,), "mix": L.spec_attn(cfg),
+                "norm2": (None,), "ffn": _ffn_spec(cfg)}
+    if kind == "mla":
+        return {"norm1": (None,), "mix": L.spec_mla(cfg),
+                "norm2": (None,), "ffn": _ffn_spec(cfg)}
+    if kind == "mlstm":
+        return R.spec_mlstm_block(cfg)
+    if kind == "slstm":
+        return R.spec_slstm_block(cfg)
+    if kind == "rglru":
+        return {"mix": R.spec_rglru_block(cfg),
+                "norm2": (None,), "ffn": _ffn_spec(cfg)}
+    raise ValueError(kind)
+
+
+def apply_block(p, cfg, kind: str, x, positions):
+    if kind == "mlstm":
+        return R.apply_mlstm_block(p, cfg, x)
+    if kind == "slstm":
+        return R.apply_slstm_block(p, cfg, x)
+    if kind == "rglru":
+        x = R.apply_rglru_block(p["mix"], cfg, x)
+        return x + _ffn_apply(p["ffn"], cfg, L.rms_norm(x, p["norm2"]))
+    window = cfg.window if kind == "local_attn" else 0
+    if kind == "mla":
+        mix = L.apply_mla(p["mix"], cfg, L.rms_norm(x, p["norm1"]), positions)
+    else:
+        mix = L.apply_attn(p["mix"], cfg, L.rms_norm(x, p["norm1"]), positions,
+                           window=window)
+    x = x + mix
+    return x + _ffn_apply(p["ffn"], cfg, L.rms_norm(x, p["norm2"]))
+
+
+# ---------------------------------------------------------------------------
+# per-block prefill (returns cache) and decode step
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(cfg, kind: str, B: int, S: int):
+    ct = jnp.dtype(cfg.compute_dtype)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind == "attn":
+        return {"k": jnp.zeros((B, S, K, hd), ct), "v": jnp.zeros((B, S, K, hd), ct)}
+    if kind == "local_attn":
+        W = min(cfg.window, S)
+        return {"k": jnp.zeros((B, W, K, hd), ct), "v": jnp.zeros((B, W, K, hd), ct)}
+    if kind == "mla":
+        m = cfg.mla
+        return {"latent": jnp.zeros((B, S, m.kv_lora_rank), ct),
+                "k_rope": jnp.zeros((B, S, m.qk_rope_head_dim), ct)}
+    if kind == "mlstm":
+        return R.mlstm_carry_init(cfg, B)
+    if kind == "slstm":
+        return R.slstm_carry_init(cfg, B)
+    if kind == "rglru":
+        return R.rglru_carry_init(cfg, B)
+    raise ValueError(kind)
+
+
+def spec_block_cache(cfg, kind: str):
+    """Logical specs for cache leaves: batch over ("pod","data"); the
+    KV-cache sequence dim is sequence-parallel over "model" (DESIGN.md §3)."""
+    if kind == "attn":
+        return {"k": ("batch", "seq", None, None), "v": ("batch", "seq", None, None)}
+    if kind == "local_attn":
+        return {"k": ("batch", None, None, None), "v": ("batch", None, None, None)}
+    if kind == "mla":
+        return {"latent": ("batch", "seq", None), "k_rope": ("batch", "seq", None)}
+    if kind == "mlstm":
+        return (("batch", None, "model", None), ("batch", None, "model"),
+                ("batch", None))
+    if kind == "slstm":
+        return (("batch", None, None), ("batch", None, None),
+                ("batch", None, None), ("batch", None, None))
+    if kind == "rglru":
+        return {"h": ("batch", "model"), "conv": ("batch", None, "model")}
+    raise ValueError(kind)
+
+
+def prefill_block(p, cfg, kind: str, x, positions):
+    """Forward + build the decode cache.  Returns (x_out, cache)."""
+    ct = jnp.dtype(cfg.compute_dtype)
+    if kind == "mlstm":
+        x, carry = R.apply_mlstm_block(p, cfg, x, return_carry=True)
+        return x, carry
+    if kind == "slstm":
+        x, carry = R.apply_slstm_block(p, cfg, x, return_carry=True)
+        return x, carry
+    if kind == "rglru":
+        x, carry = R.apply_rglru_block(p["mix"], cfg, x, return_carry=True)
+        x = x + _ffn_apply(p["ffn"], cfg, L.rms_norm(x, p["norm2"]))
+        return x, carry
+    # attention flavours: recompute k/v (cheap relative to attention) to
+    # populate the cache.
+    xn = L.rms_norm(x, p["norm1"])
+    if kind == "mla":
+        mix = L.apply_mla(p["mix"], cfg, xn, positions)
+        _, _, latent, k_rope = L._mla_qkv(p["mix"], cfg, xn.astype(ct), positions)
+        cache = {"latent": latent.astype(ct), "k_rope": k_rope[:, :, 0, :].astype(ct)}
+    else:
+        window = cfg.window if kind == "local_attn" else 0
+        mix = L.apply_attn(p["mix"], cfg, xn, positions, window=window)
+        k = jnp.einsum("btd,dgk->btgk", xn.astype(ct), p["mix"]["wk"].astype(ct))
+        v = jnp.einsum("btd,dgk->btgk", xn.astype(ct), p["mix"]["wv"].astype(ct))
+        k = L.rope(k, positions, cfg.rope_theta)
+        if kind == "local_attn":
+            W = min(cfg.window, x.shape[1])
+            k, v = k[:, -W:], v[:, -W:]
+        cache = {"k": k.astype(ct), "v": v.astype(ct)}
+    x = x + mix
+    return x + _ffn_apply(p["ffn"], cfg, L.rms_norm(x, p["norm2"])), cache
+
+
+def decode_block(p, cfg, kind: str, x, cache, pos):
+    """One-token decode.  x: (B,1,d).  Returns (x_out, cache)."""
+    if kind == "mlstm":
+        return R.mlstm_block_step(p, cfg, x, cache)
+    if kind == "slstm":
+        return R.slstm_block_step(p, cfg, x, cache)
+    if kind == "rglru":
+        x, cache = R.rglru_block_step(p["mix"], cfg, x, cache)
+        return x + _ffn_apply(p["ffn"], cfg, L.rms_norm(x, p["norm2"])), cache
+    xn = L.rms_norm(x, p["norm1"])
+    if kind == "mla":
+        mix, lat, kr = L.mla_decode(p["mix"], cfg, xn, cache["latent"],
+                                    cache["k_rope"], pos)
+        cache = {"latent": lat, "k_rope": kr}
+    else:
+        window = cfg.window if kind == "local_attn" else 0
+        mix, ck, cv = L.attn_decode(p["mix"], cfg, xn, cache["k"], cache["v"], pos,
+                                    window=window)
+        cache = {"k": ck, "v": cv}
+    x = x + mix
+    return x + _ffn_apply(p["ffn"], cfg, L.rms_norm(x, p["norm2"])), cache
+
+
+# ---------------------------------------------------------------------------
+# full LM
+# ---------------------------------------------------------------------------
+
+
+def _pattern(cfg):
+    P = len(cfg.block_pattern)
+    return cfg.block_pattern, cfg.num_layers // P, cfg.num_layers % P
+
+
+def init_lm(key, cfg):
+    pat, n_groups, rem = _pattern(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    dt = L.pdt(cfg)
+    V = cfg.padded_vocab
+
+    groups = []
+    for g in range(n_groups):
+        groups.append(tuple(init_block(keys[g * len(pat) + i], cfg, kind)
+                            for i, kind in enumerate(pat)))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *groups) if n_groups > 1 \
+        else jax.tree.map(lambda x: x[None], groups[0])
+    rem_params = tuple(init_block(keys[n_groups * len(pat) + i], cfg, pat[i % len(pat)])
+                       for i in range(rem))
+    params = {
+        "emb": L.he(keys[-1], (V, cfg.d_model), dt, fan_in=cfg.d_model),
+        "blocks": stacked,
+        "rem": rem_params,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.he(keys[-2], (cfg.d_model, V), dt)
+    return params
+
+
+def spec_lm(cfg):
+    pat, n_groups, rem = _pattern(cfg)
+    group_spec = tuple(spec_block(cfg, kind) for kind in pat)
+    # stacked over groups: prepend a None (layer) dim to every leaf
+    stacked = jax.tree.map(
+        lambda t: (None,) + t, group_spec,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    spec = {
+        "emb": ("model", "fsdp"),
+        "blocks": stacked,
+        "rem": tuple(spec_block(cfg, pat[i % len(pat)]) for i in range(rem)),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ("fsdp", "model")
+    return spec
+
+
+def _embed(params, cfg, tokens):
+    ct = jnp.dtype(cfg.compute_dtype)
+    emb = params["emb"]
+    if cfg.fsdp:
+        emb = gather_fsdp(emb, ("model", "fsdp"))
+    x = emb[tokens].astype(ct)
+    return _constrain(x, "batch", None, None)
+
+
+def _logits(params, cfg, x):
+    x = L.rms_norm(x, params["final_norm"])
+    w = params["emb"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.fsdp and not cfg.tie_embeddings:
+        w = gather_fsdp(w, ("fsdp", "model"))
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    V = cfg.padded_vocab
+    if V != cfg.vocab_size:  # mask the padding vocab entries
+        mask = jnp.arange(V) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def _scan_groups(params, cfg, x, positions, apply_fn):
+    """apply_fn(block_params, kind, x) -> x.  Scans full groups, unrolls rem."""
+    pat, n_groups, rem = _pattern(cfg)
+    gspecs = tuple(spec_block(cfg, kind) for kind in pat)
+
+    def group_body(x, gp):
+        if cfg.fsdp:
+            gp = gather_fsdp(gp, gspecs)
+        for i, kind in enumerate(pat):
+            x = apply_fn(gp[i], kind, x)
+        return x, None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    for i in range(rem):
+        rp = params["rem"][i]
+        if cfg.fsdp:
+            rp = gather_fsdp(rp, gspecs[i % len(pat)])
+        x = apply_fn(rp, pat[i % len(pat)], x)
+    return x
+
+
+def lm_forward(params, cfg, tokens, extra_embeds=None):
+    """tokens: (B,T) int32; extra_embeds: (B,P,d) prepended (VLM stub)."""
+    x = _embed(params, cfg, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    x = _scan_groups(params, cfg, x, positions,
+                     lambda p, kind, h: apply_block(p, cfg, kind, h, positions))
+    return _logits(params, cfg, x)
+
+
+def lm_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    extra = batch.get("patches")
+    logits = lm_forward(params, cfg, tokens, extra_embeds=extra)
+    P = 0 if extra is None else extra.shape[1]
+    pred = logits[:, P:-1]  # predict token t+1 from text position t
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---- prefill / decode -----------------------------------------------------
+
+
+def lm_prefill(params, cfg, tokens, extra_embeds=None):
+    """Returns (last_logits (B,V), cache) — cache stacked like params."""
+    x = _embed(params, cfg, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    pat, n_groups, rem = _pattern(cfg)
+    gspecs = tuple(spec_block(cfg, kind) for kind in pat)
+
+    def group_body(x, gp):
+        if cfg.fsdp:
+            gp = gather_fsdp(gp, gspecs)
+        caches = []
+        for i, kind in enumerate(pat):
+            x, c = prefill_block(gp[i], cfg, kind, x, positions)
+            caches.append(c)
+        return x, tuple(caches)
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    rem_cache = []
+    for i in range(rem):
+        x, c = prefill_block(params["rem"][i], cfg, pat[i % len(pat)], x, positions)
+        rem_cache.append(c)
+    logits = _logits(params, cfg, x[:, -1:])[:, 0]
+    return logits, {"blocks": cache, "rem": tuple(rem_cache)}
+
+
+def lm_cache_init(cfg, B, S):
+    pat, n_groups, rem = _pattern(cfg)
+    group = tuple(init_block_cache(cfg, kind, B, S) for kind in pat)
+    stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape),
+                           group)
+    remc = tuple(init_block_cache(cfg, pat[i % len(pat)], B, S) for i in range(rem))
+    return {"blocks": stacked, "rem": remc}
+
+
+def lm_cache_spec(cfg):
+    pat, n_groups, rem = _pattern(cfg)
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    group = tuple(spec_block_cache(cfg, kind) for kind in pat)
+    stacked = jax.tree.map(lambda t: (None,) + t, group, is_leaf=is_spec)
+    remc = tuple(spec_block_cache(cfg, pat[i % len(pat)]) for i in range(rem))
+    return {"blocks": stacked, "rem": remc}
+
+
+def lm_decode_step(params, cfg, cache, token, pos):
+    """token: (B,1) int32; pos: scalar int32.  Returns (logits (B,V), cache)."""
+    x = _embed(params, cfg, token)
+    pat, n_groups, rem = _pattern(cfg)
+    gspecs = tuple(spec_block(cfg, kind) for kind in pat)
+
+    def group_body(x, scans):
+        gp, gc = scans
+        if cfg.fsdp:
+            gp = gather_fsdp(gp, gspecs)
+        new_c = []
+        for i, kind in enumerate(pat):
+            x, c = decode_block(gp[i], cfg, kind, x, gc[i], pos)
+            new_c.append(c)
+        return x, tuple(new_c)
+
+    x, new_cache = jax.lax.scan(group_body, x, (params["blocks"], cache["blocks"]))
+    rem_cache = []
+    for i in range(rem):
+        x, c = decode_block(params["rem"][i], cfg, pat[i % len(pat)], x,
+                            cache["rem"][i], pos)
+        rem_cache.append(c)
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, {"blocks": new_cache, "rem": tuple(rem_cache)}

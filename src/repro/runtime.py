@@ -1,0 +1,38 @@
+"""Ambient runtime context: the active device mesh.
+
+Model code (notably the MoE layer, which uses an explicit ``shard_map``
+collective schedule) consults :func:`get_mesh`.  Smoke tests and single-device
+runs leave it unset and take the local math path — identical semantics, no
+collectives.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+
+_state = threading.local()
+
+
+def get_mesh() -> Optional[jax.sharding.Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[jax.sharding.Mesh]):
+    prev = get_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def data_axes(mesh: Optional[jax.sharding.Mesh] = None) -> tuple[str, ...]:
+    """The batch/FSDP axes present in the mesh ('pod' first when multi-pod)."""
+    mesh = mesh or get_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,90 @@
+"""Logical-axis sharding resolution.
+
+Param ``spec_*`` trees hold tuples of logical names per dim:
+
+  - ``"model"`` — tensor-parallel candidate (heads / d_ff / vocab / experts).
+  - ``"fsdp"``  — shard over the ("pod","data") axes when ``cfg.fsdp``.
+  - ``"batch"`` — activation batch dims, always over ("pod","data").
+  - ``"seq"``   — sequence-parallel candidate (KV-cache length) -> "model".
+  - ``None``    — replicated dim.
+
+:func:`resolve_tree` turns (shapes, logical specs) into concrete
+``PartitionSpec`` trees with two safety rules applied per tensor,
+left-to-right over dims:
+
+  1. a mesh axis may be claimed by at most one dim (first eligible wins —
+     e.g. MoE weights ``("model","fsdp","model")``: the expert dim claims
+     "model" when E divides it (kimi, 384/16), otherwise d_ff claims it
+     (grok, 8 experts));
+  2. a dim only claims an axis when its size divides the axis size product
+     (uneven sharding never reaches XLA; 40-head archs fall back to
+     replicated attention weights, documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LOGICAL_RULES = {
+    "model": ("model",),
+    "seq": ("model",),
+    "fsdp": ("pod", "data"),
+    "batch": ("pod", "data"),
+}
+
+
+def _axes_for(logical: str | None, mesh: Mesh, fsdp: bool):
+    if logical is None:
+        return None
+    if logical == "fsdp" and not fsdp:
+        return None
+    cand = tuple(a for a in LOGICAL_RULES[logical] if a in mesh.axis_names)
+    return cand or None
+
+
+def resolve_spec(shape, logical_spec, mesh: Mesh, fsdp: bool) -> P:
+    """Concrete PartitionSpec for one tensor."""
+    assert len(shape) == len(logical_spec), (shape, logical_spec)
+    claimed: set[str] = set()
+    out = []
+    for size, logical in zip(shape, logical_spec):
+        axes = _axes_for(logical, mesh, fsdp)
+        if axes is None or any(a in claimed for a in axes):
+            out.append(None)
+            continue
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        if size % total != 0:
+            out.append(None)
+            continue
+        claimed.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _map_up_to(shapes_tree, specs_tree, fn):
+    """Map fn(shape_leaf, spec_leaf) with specs flattened *up to* the shapes
+    structure — logical spec tuples are themselves pytrees, so a plain
+    tree.map over both would mis-recurse into them."""
+    flat_shapes, treedef = jax.tree.flatten(shapes_tree)
+    flat_specs = treedef.flatten_up_to(specs_tree)
+    return jax.tree.unflatten(
+        treedef, [fn(sh, sp) for sh, sp in zip(flat_shapes, flat_specs)])
+
+
+def resolve_tree(shapes_tree, specs_tree, mesh: Mesh, fsdp: bool):
+    """shapes_tree: tree of ShapeDtypeStruct/arrays; specs_tree: matching tree
+    of logical tuples.  Returns a tree of NamedSharding."""
+    return _map_up_to(
+        shapes_tree, specs_tree,
+        lambda sh, sp: NamedSharding(mesh, resolve_spec(sh.shape, sp, mesh, fsdp)))
+
+
+def pspec_tree(shapes_tree, specs_tree, mesh: Mesh, fsdp: bool):
+    """Same as resolve_tree but returns raw PartitionSpecs."""
+    return _map_up_to(
+        shapes_tree, specs_tree,
+        lambda sh, sp: resolve_spec(sh.shape, sp, mesh, fsdp))

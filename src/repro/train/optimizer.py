@@ -1,0 +1,65 @@
+"""AdamW in pure JAX (no optax dependency), with a bf16-state mode.
+
+The optimizer-state dtype is ``cfg.opt_dtype``: the trillion-param configs
+(grok, kimi) run bf16 m/v so params+state fit pod HBM (DESIGN.md §3).  The
+update math always runs in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, opt_dtype="float32"):
+    dt = jnp.dtype(opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_specs(param_specs):
+    """Optimizer-state sharding mirrors param sharding."""
+    return {"m": param_specs, "v": param_specs, "step": ()}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(grads, opt, params, *, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, clip_norm=1.0):
+    """Returns (new_params, new_opt, metrics)."""
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def moments(g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        return m32, v32
+
+    # three passes (identical subexpressions are CSE'd by XLA inside jit) —
+    # avoids tuple-leaved trees clashing with the tuple *structure* nodes in
+    # the model param trees.
+    def upd_p(g, m, v, p):
+        m32, v32 = moments(g, m, v)
+        step_val = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps) \
+            + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_val).astype(p.dtype)
+
+    def upd_m(g, m, v):
+        return moments(g, m, v)[0].astype(m.dtype)
+
+    def upd_v(g, m, v):
+        return moments(g, m, v)[1].astype(v.dtype)
+
+    new_params = jax.tree.map(upd_p, grads, opt["m"], opt["v"], params)
+    new_m = jax.tree.map(upd_m, grads, opt["m"], opt["v"])
+    new_v = jax.tree.map(upd_v, grads, opt["m"], opt["v"])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}

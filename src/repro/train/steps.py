@@ -1,0 +1,62 @@
+"""Jitted step builders: train / prefill / decode, with optional in-graph
+VELOC L1 capture (DeepFreeze-style, DESIGN.md §2).
+
+``make_train_step(cfg, capture=True)`` returns a step whose outputs include a
+device-resident snapshot of the fresh params+opt state.  Because the copy is
+part of the XLA program, the scheduler overlaps it with compute — the TPU
+analogue of DeepFreeze's execution-graph augmentation (the paper's L1).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import make_loss_fn, model_specs
+from repro.sharding import pspec_tree
+from repro.train import optimizer as opt_lib
+
+
+def init_train_state(key, cfg: ModelConfig):
+    from repro.models.model import init_model
+
+    params = init_model(key, cfg)
+    opt = opt_lib.adamw_init(params, cfg.opt_dtype)
+    return {"params": params, "opt": opt}
+
+
+def train_state_specs(cfg: ModelConfig):
+    pspecs = model_specs(cfg)
+    return {"params": pspecs, "opt": opt_lib.adamw_specs(pspecs)}
+
+
+def make_train_step(cfg: ModelConfig, *, lr=3e-4, capture=False):
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        new_params, new_opt, metrics = opt_lib.adamw_update(
+            grads, state["opt"], state["params"], lr=lr)
+        metrics["loss"] = loss
+        new_state = {"params": new_params, "opt": new_opt}
+        if capture:
+            # L1 snapshot: explicit device-side copy of the fresh state.
+            # optimization_barrier keeps XLA from aliasing it away, so the
+            # snapshot survives in its own buffers (restorable even while
+            # the next step donates/overwrites the live state).
+            snap = jax.lax.optimization_barrier(
+                jax.tree.map(lambda x: x + jnp.zeros((), x.dtype), new_state))
+            return new_state, snap, metrics
+        return new_state, metrics
+
+    return train_step
+
+
+def resolve_state_shardings(cfg, mesh, state_shapes):
+    """NamedSharding tree for a train state (params+opt) on a mesh."""
+    from repro.sharding import resolve_tree
+
+    specs = train_state_specs(cfg)
+    return resolve_tree(state_shapes, specs, mesh, cfg.fsdp)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# NOTE: XLA_FLAGS / device-count overrides are deliberately NOT set here —
+# smoke tests and benches must see 1 device.  Multi-device behaviour is
+# exercised via subprocesses in test_multidevice.py.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

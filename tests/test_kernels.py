@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.checksum import checksum_pallas
+from repro.kernels.quantize import dequantize_pallas, quantize_pallas
+from repro.kernels.xor_parity import xor_pair_pallas, xor_reduce_pallas
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# xor_parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [2, 3, 4, 8, 16])
+@pytest.mark.parametrize("n", [1024, 4096])
+def test_xor_reduce_sweep(k, n):
+    x = RNG.integers(0, 2**32, size=(k, n), dtype=np.uint32)
+    got = xor_reduce_pallas(jnp.asarray(x), interpret=True)
+    want = ref.xor_reduce_ref(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [17, 1000, 5000])
+def test_xor_reduce_unaligned_via_ops(n):
+    x = RNG.integers(0, 2**32, size=(4, n), dtype=np.uint32)
+    got = np.asarray(ops.xor_reduce(x))
+    want = x[0] ^ x[1] ^ x[2] ^ x[3]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_xor_pair():
+    a = RNG.integers(0, 2**32, size=(2048,), dtype=np.uint32)
+    b = RNG.integers(0, 2**32, size=(2048,), dtype=np.uint32)
+    got = xor_pair_pallas(jnp.asarray(a), jnp.asarray(b), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), a ^ b)
+
+
+def test_xor_involution():
+    """parity ^ shard_i recovers the reduce of the others (RAID property)."""
+    x = RNG.integers(0, 2**32, size=(5, 2048), dtype=np.uint32)
+    parity = np.asarray(ops.xor_reduce(x))
+    for i in range(5):
+        others = np.asarray(ops.xor_reduce(np.delete(x, i, axis=0)))
+        np.testing.assert_array_equal(parity ^ x[i], others)
+
+
+# ---------------------------------------------------------------------------
+# checksum
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,chunk", [(8, 256), (16, 2048), (32, 512)])
+def test_checksum_sweep(rows, chunk):
+    x = RNG.integers(0, 2**32, size=(rows, chunk), dtype=np.uint32)
+    got = checksum_pallas(jnp.asarray(x), block_rows=8, interpret=True)
+    want = ref.checksum_ref(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_checksum_detects_reorder():
+    x = RNG.integers(0, 2**32, size=(8, 256), dtype=np.uint32)
+    y = x.copy()
+    y[0, [3, 7]] = y[0, [7, 3]]  # swap two words: c1 equal, c2 must differ
+    a = np.asarray(checksum_pallas(jnp.asarray(x), interpret=True))
+    b = np.asarray(checksum_pallas(jnp.asarray(y), interpret=True))
+    assert a[0, 0] == b[0, 0] and a[0, 1] != b[0, 1]
+
+
+@given(st.binary(min_size=0, max_size=4096))
+@settings(max_examples=20, deadline=None)
+def test_digest_deterministic(buf):
+    assert ops.digest(buf) == ops.digest(buf)
+
+
+@given(st.binary(min_size=16, max_size=2048), st.integers(0, 15))
+@settings(max_examples=20, deadline=None)
+def test_digest_detects_flip(buf, pos):
+    mod = bytearray(buf)
+    mod[pos] ^= 0x5A
+    if bytes(mod) != buf:
+        assert ops.digest(bytes(mod)) != ops.digest(buf)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,bs", [(32, 256), (64, 256), (32, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_quantize_kernel_vs_ref(rows, bs, dtype):
+    rng = np.random.default_rng((rows, bs, dtype().itemsize))
+    x = (rng.standard_normal((rows, bs)) * 3).astype(dtype)
+    q, s = quantize_pallas(jnp.asarray(x), interpret=True)
+    qr, sr = ref.quantize_ref(jnp.asarray(x))
+    # identical up to round-half-to-even ties at the f16->f32 boundary
+    diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    back = dequantize_pallas(q, s, interpret=True)
+    br = ref.dequantize_ref(qr, sr)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(br), rtol=1e-6)
+
+
+@given(st.integers(10, 5000), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_quantize_roundtrip_error_bound(n, seed):
+    """Property: block-int8 quantization error <= scale/2 per element."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * rng.uniform(0.1, 10)).astype(np.float32)
+    q, s, n_out, shape = ops.quantize(x)
+    back = ops.dequantize(q, s, n_out, shape)
+    per_block_bound = np.repeat(s, 256)[:n] * 0.5 + 1e-7
+    assert (np.abs(back - x) <= per_block_bound).all()
+
+
+def test_quantize_preserves_shape_dtype_meta():
+    x = RNG.standard_normal((7, 13, 3)).astype(np.float32)
+    q, s, n, shape = ops.quantize(x)
+    back = ops.dequantize(q, s, n, shape)
+    assert back.shape == x.shape
+    assert np.abs(back - x).max() < 0.5

@@ -1,0 +1,120 @@
+"""Sharding resolution rules, DataStates lineage, HLO analyzer units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import HloModule, analyze_text, roofline
+from repro.core import Cluster, DataStates, VelocConfig
+from repro.sharding import resolve_spec
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+M = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_resolve_spec_basic():
+    from jax.sharding import PartitionSpec as P
+
+    assert resolve_spec((4096, 32, 128), ("fsdp", "model", None), M, True) \
+        == P(("pod", "data"), "model")
+    # fsdp off -> dropped
+    assert resolve_spec((4096, 32, 128), ("fsdp", "model", None), M, False) \
+        == P(None, "model")
+    # non-divisible head count falls back to replication
+    assert resolve_spec((4096, 40, 64), ("fsdp", "model", None), M, True) \
+        == P(("pod", "data"))
+
+
+def test_resolve_spec_claiming_left_to_right():
+    from jax.sharding import PartitionSpec as P
+
+    # kimi MoE weights: E=384 divides 16 -> expert dim claims "model"
+    assert resolve_spec((384, 7168, 2048), ("model", "fsdp", "model"), M, True) \
+        == P("model", ("pod", "data"))
+    # grok: E=8 does not divide -> d_ff claims instead
+    assert resolve_spec((8, 6144, 32768), ("model", "fsdp", "model"), M, True) \
+        == P(None, ("pod", "data"), "model")
+
+
+def test_resolve_spec_batch_indivisible_replicates():
+    from jax.sharding import PartitionSpec as P
+
+    assert resolve_spec((1, 128), ("batch", None), M, False) == P()
+
+
+# ---------------------------------------------------------------------------
+# DataStates lineage
+# ---------------------------------------------------------------------------
+
+
+def test_datastates_lineage_clone_search(tmp_path):
+    cluster = Cluster(VelocConfig(scratch=str(tmp_path)), nranks=1)
+    ds = DataStates(cluster)
+    a = ds.record(10, metrics={"loss": 2.0})
+    b = ds.record(20, metrics={"loss": 1.5})
+    c = ds.clone(a.id, "branch-x")
+    d = ds.record(30, branch="branch-x", metrics={"loss": 1.2})
+    assert [s.id for s in ds.lineage(d.id)] == [a.id, c.id, d.id]
+    assert ds.best("loss").id == d.id
+    assert set(ds.branches()) == {"main", "branch-x"}
+    assert len(ds.search(lambda s: "clone" in s.tags)) == 1
+    # persistence across "process restart"
+    ds2 = DataStates(cluster)
+    assert [s.id for s in ds2.lineage(d.id)] == [a.id, c.id, d.id]
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_flops_match_analytic_scan_vs_unrolled():
+    D, F, L, B = 64, 128, 4, 8
+
+    def loss(params, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, params)
+        return jnp.mean(y ** 2)
+
+    p = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    txt = jax.jit(jax.grad(loss)).lower(p, x).compile().as_text()
+    costs = analyze_text(txt, 1)
+    ana = 3 * 2 * B * D * D * L  # fwd + 2x bwd dots
+    assert abs(costs.flops - ana) / ana < 0.15, (costs.flops, ana)
+
+
+def test_hlo_trip_count_and_roofline():
+    def f(x):
+        def body(c, _):
+            return jnp.sin(c) @ jnp.ones((64, 64), jnp.float32), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    txt = jax.jit(f).lower(jax.ShapeDtypeStruct((8, 64), jnp.float32)) \
+        .compile().as_text()
+    costs = analyze_text(txt, 1)
+    ana = 2 * 8 * 64 * 64 * 10
+    assert abs(costs.flops - ana) / ana < 0.1
+    r = roofline(costs, model_flops_per_device=ana)
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert 0 < r["useful_compute_ratio"] <= 1.2
+
+
+def test_hlo_parser_group_size():
+    from repro.analysis.hlo import Instr
+
+    i = Instr("ar", "f32[16,256]", "all-reduce",
+              "%dot.1), channel_id=1, replica_groups=[4,2]<=[8], "
+              "use_global_device_ids=true, to_apply=%add")
+    assert i.group_size(8) == 2
+    i2 = Instr("ar", "f32[4]", "all-reduce",
+               "%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%a")
+    assert i2.group_size(8) == 4

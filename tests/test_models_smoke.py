@@ -1,0 +1,107 @@
+"""Per-assigned-architecture smoke tests: reduced same-family config, one
+forward/train step on CPU, asserting output shapes + finiteness; prefill and
+decode paths; spec-tree/param-tree structural agreement."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, ShapeCfg, get_config, list_configs, smoke_config
+from repro.models.model import (batch_specs, batch_struct, cache_init,
+                                cache_specs, count_params, init_model,
+                                make_batch, make_decode_fn, make_loss_fn,
+                                make_prefill_fn, model_specs)
+from repro.train.steps import init_train_state, make_train_step, train_state_specs
+
+ARCHS = list_configs()
+SM = ShapeCfg("smoke", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = smoke_config(arch)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, SM)
+    step = jax.jit(make_train_step(cfg))
+    new_state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"]), arch
+    assert jnp.isfinite(metrics["grad_norm"]), arch
+    # params updated, shapes preserved
+    for old, new in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(new_state["params"])):
+        assert old.shape == new.shape and old.dtype == new.dtype
+    # a second step keeps the loss finite
+    _, m2 = step(new_state, make_batch(cfg, SM, seed=1))
+    assert jnp.isfinite(m2["loss"])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode_smoke(arch):
+    cfg = smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    logits, cache = jax.jit(make_prefill_fn(cfg))(params, make_batch(cfg, SM))
+    V = cfg.padded_vocab
+    assert logits.shape == (SM.global_batch, V)
+    assert jnp.all(jnp.isfinite(logits))
+    # greedy-decode 3 tokens from a fresh cache
+    dcache = cache_init(cfg, 2, 16)
+    decode = jax.jit(make_decode_fn(cfg))
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for pos in range(3):
+        lg, dcache = decode(params, dcache, tok, jnp.asarray(pos, jnp.int32))
+        assert lg.shape == (2, V)
+        assert jnp.all(jnp.isfinite(lg)), (arch, pos)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    # padded vocab entries must never win the argmax
+    assert int(tok.max()) < cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_trees_match_param_trees(arch):
+    cfg = smoke_config(arch)
+    shapes = jax.eval_shape(lambda: init_train_state(jax.random.PRNGKey(0), cfg))
+    flat, treedef = jax.tree.flatten(shapes)
+    flat_specs = treedef.flatten_up_to(train_state_specs(cfg))
+    assert len(flat) == len(flat_specs)
+    for leaf, spec in zip(flat, flat_specs):
+        assert len(spec) == len(leaf.shape), (arch, spec, leaf.shape)
+    # cache specs too
+    cshapes = jax.eval_shape(lambda: cache_init(cfg, 2, 16))
+    cflat, ctd = jax.tree.flatten(cshapes)
+    cspecs = ctd.flatten_up_to(cache_specs(cfg))
+    assert len(cflat) == len(cspecs)
+    for leaf, spec in zip(cflat, cspecs):
+        assert len(spec) == len(leaf.shape), (arch, spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_batch_struct_covers_shapes(arch):
+    cfg = get_config(arch)
+    for sname, shape in SHAPES.items():
+        ok, why = cfg.supports_shape(shape)
+        if not ok:
+            assert sname == "long_500k" and why
+            continue
+        bs = batch_struct(cfg, shape)
+        sp = batch_specs(cfg, shape)
+        assert set(bs) == set(sp)
+
+
+def test_param_counts_match_published():
+    """Total param counts within tolerance of the published sizes."""
+    expect = {
+        "yi-9b": (8.8e9, 0.1), "phi3-mini-3.8b": (3.8e9, 0.1),
+        "minitron-8b": (7.7e9, 0.15), "kimi-k2-1t-a32b": (1.04e12, 0.05),
+        "grok-1-314b": (3.16e11, 0.05), "minicpm3-4b": (5.0e9, 0.3),
+        "xlstm-1.3b": (1.9e9, 0.5), "recurrentgemma-2b": (3.5e9, 0.5),
+        "whisper-medium": (0.8e9, 0.3),
+    }
+    for arch, (want, tol) in expect.items():
+        got = count_params(get_config(arch))["total"]
+        assert abs(got - want) / want < tol, (arch, got, want)
+
+
+def test_moe_active_params():
+    c = count_params(get_config("kimi-k2-1t-a32b"))
+    assert 2.5e10 < c["active"] < 4e10  # "a32b"
+    c = count_params(get_config("grok-1-314b"))
+    assert 6e10 < c["active"] < 1.1e11

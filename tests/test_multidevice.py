@@ -1,0 +1,176 @@
+"""Multi-device behaviours need XLA_FLAGS set before jax init, so each test
+runs a pytest-authored script in a subprocess with 8 fake host devices."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=500, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_ring_xor_and_partner_encode():
+    run_sub("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.core.partner import (encode_l2, ring_xor_parity_ref,
+                                    xor_reconstruct_group, flatten_local_u32)
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    state = {"a": jnp.arange(4*6*512, dtype=jnp.float32).reshape(24, 512),
+             "b": jnp.ones((2, 256), jnp.bfloat16)}
+    pspecs = {"a": P("data", None), "b": P(None, "model")}
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                      is_leaf=lambda x: isinstance(x, P))
+    state = jax.tree.map(jax.device_put, state, sh)
+
+    def local_block(d, m):
+        return np.asarray(flatten_local_u32(
+            {"a": state["a"][d*6:(d+1)*6], "b": state["b"][:, m*128:(m+1)*128]}))
+
+    def pad(x, mult=1024):
+        p = (-len(x)) % mult
+        return np.concatenate([x, np.zeros(p, np.uint32)]) if p else x
+
+    # partner copy
+    out = np.asarray(encode_l2(state, pspecs, mesh, mode="partner"))
+    n = out.shape[0] // 8
+    for d in range(4):
+        for m in range(2):
+            lb = pad(local_block((d-1) % 4, m))
+            got = out[(d*2+m)*n:(d*2+m+1)*n]
+            assert (got[:len(lb)] == lb).all(), (d, m)
+
+    # ring XOR parity vs oracle + reconstruction of a lost device
+    par = np.asarray(encode_l2(state, pspecs, mesh, mode="xor"))
+    npar = par.shape[0] // 8
+    bufs = [pad(local_block(d, 0)) for d in range(4)]
+    ref = ring_xor_parity_ref(bufs)
+    for d in range(4):
+        got = par[(d*2)*npar:(d*2)*npar+npar]
+        assert (got[:len(ref[d])] == ref[d]).all(), d
+    lost = 2
+    surv = {d: bufs[d] for d in range(4) if d != lost}
+    parity = {d: par[(d*2)*npar:(d*2)*npar+npar][:len(ref[d])]
+              for d in range(4) if d != lost}
+    rec = xor_reconstruct_group(surv, parity, lost, 4, len(bufs[lost]))
+    assert (rec == bufs[lost]).all()
+    print("L2 device encode OK")
+    """)
+
+
+def test_sharded_train_step_and_moe():
+    run_sub("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import runtime
+    from repro.configs.base import ShapeCfg, smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import make_batch
+    from repro.sharding import resolve_tree
+    from repro.train.steps import (init_train_state, make_train_step,
+                                   train_state_specs)
+
+    mesh = make_host_mesh(data=4, model=2)
+    shape = ShapeCfg("t", 32, 8, "train")
+    for arch in ("yi-9b", "kimi-k2-1t-a32b"):
+        cfg = smoke_config(arch).replace(fsdp=True)
+        with runtime.use_mesh(mesh):
+            state = init_train_state(jax.random.PRNGKey(0), cfg)
+            sh = resolve_tree(jax.eval_shape(lambda: state), train_state_specs(cfg),
+                              mesh, cfg.fsdp)
+            state = jax.tree.map(jax.device_put, state, sh)
+            step = jax.jit(make_train_step(cfg), donate_argnums=(0,))
+            state, m = step(state, make_batch(cfg, shape))
+            state, m = step(state, make_batch(cfg, shape, seed=1))
+        assert jnp.isfinite(m["loss"]), arch
+        print(arch, "sharded loss", float(m["loss"]))
+
+    # MoE: sharded result equals single-device result
+    cfg = smoke_config("kimi-k2-1t-a32b")
+    from repro.models.model import init_model, make_loss_fn
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    batch = make_batch(cfg, shape)
+    loss_fn = make_loss_fn(cfg)
+    l_single = float(jax.jit(loss_fn)(params, batch))
+    with runtime.use_mesh(mesh):
+        from repro.models.model import model_specs
+        sh = resolve_tree(jax.eval_shape(lambda: params), model_specs(cfg),
+                          mesh, False)
+        params_s = jax.tree.map(jax.device_put, params, sh)
+        l_shard = float(jax.jit(loss_fn)(params_s, batch))
+    assert abs(l_single - l_shard) < 5e-2, (l_single, l_shard)
+    print("moe sharded==local", l_single, l_shard)
+    """)
+
+
+def test_dryrun_cell_and_capture_variant():
+    run_sub("""
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch import dryrun
+    # reuse lower_cell against a small host mesh via monkeypatch of the
+    # production mesh: lower the demo arch on (4,2)
+    mesh = make_host_mesh(data=4, model=2)
+    _, compiled, rec = dryrun.lower_cell("veloc-demo-100m", "train_4k", mesh)
+    assert compiled is not None
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    _, compiled2, rec2 = dryrun.lower_cell("veloc-demo-100m", "train_4k", mesh,
+                                           variant="capture")
+    # fused capture must cost ~zero extra FLOPs (copy only)
+    f1, f2 = rec["roofline"]["hlo_flops"], rec2["roofline"]["hlo_flops"]
+    assert abs(f2 - f1) / f1 < 0.02, (f1, f2)
+    _, compiled3, rec3 = dryrun.lower_cell("veloc-demo-100m", "train_4k", mesh,
+                                           variant="l2")
+    assert rec3["roofline"]["by_collective"].get("collective-permute", 0) > 0
+    print("dryrun cells OK")
+    """)
+
+
+def test_checkpoint_restore_sharded_state():
+    run_sub("""
+    import jax, jax.numpy as jnp, numpy as np, shutil
+    from repro import runtime
+    from repro.configs.base import ShapeCfg, smoke_config
+    from repro.core import VelocClient, VelocConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import make_batch
+    from repro.sharding import resolve_tree
+    from repro.train.steps import (init_train_state, make_train_step,
+                                   train_state_specs)
+
+    shutil.rmtree("/tmp/veloc_md", ignore_errors=True)
+    mesh = make_host_mesh(data=4, model=2)
+    cfg = smoke_config("yi-9b")
+    shape = ShapeCfg("t", 32, 8, "train")
+    with runtime.use_mesh(mesh):
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        sh = resolve_tree(jax.eval_shape(lambda: state), train_state_specs(cfg),
+                          mesh, cfg.fsdp)
+        state = jax.tree.map(jax.device_put, state, sh)
+        step = jax.jit(make_train_step(cfg))
+        state, _ = step(state, make_batch(cfg, shape))
+
+        client = VelocClient(VelocConfig(scratch="/tmp/veloc_md", mode="sync",
+                                         partner=False, xor_group=0))
+        client.checkpoint(state, version=1)
+        v, restored = client.restart_latest(state, shardings=sh)
+        assert v == 1
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # restored arrays carry the mesh shardings
+        leaf = jax.tree.leaves(restored)[0]
+        assert len(leaf.sharding.device_set) == 8
+    print("sharded checkpoint/restore OK")
+    """)

@@ -1,0 +1,156 @@
+"""End-to-end behaviour: resilient training with VELOC — restart exactness,
+failure recovery mid-run, async-vs-sync equivalence, productive branching."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCfg, smoke_config
+from repro.core import DataStates, VelocClient, VelocConfig
+from repro.train.data import SyntheticStream
+from repro.train.steps import init_train_state, make_train_step
+
+SHAPE = ShapeCfg("sys", 64, 4, "train")
+
+
+def _run(cfg, client, steps, start_state=None, start=0, stream_seed=7,
+         capture=True):
+    stream = SyntheticStream(cfg, SHAPE, seed=stream_seed)
+    state = start_state if start_state is not None else \
+        init_train_state(jax.random.PRNGKey(0), cfg)
+    step_fn = jax.jit(make_train_step(cfg, capture=capture))
+    losses = []
+    for s in range(start, steps):
+        if capture:
+            state, snap, m = step_fn(state, stream.batch(s))
+        else:
+            state, m = step_fn(state, stream.batch(s))
+            snap = None
+        losses.append(float(m["loss"]))
+        if client is not None and (s + 1) % 3 == 0:
+            client.checkpoint(state, version=s + 1, snap=snap,
+                              meta={"step": s + 1})
+    return state, losses
+
+
+def test_restart_is_bitwise_exact(tmp_path):
+    """Train 9 steps with checkpoints; resume from v6 and recompute 7..9;
+    final params must equal the uninterrupted run bitwise (deterministic
+    stream + deterministic step)."""
+    cfg = smoke_config("veloc-demo-100m")
+    vc = VelocConfig(scratch=str(tmp_path), mode="sync", partner=False,
+                     xor_group=0, keep_versions=10)
+    client = VelocClient(vc)
+    final, _ = _run(cfg, client, steps=9)
+
+    template = jax.eval_shape(lambda: init_train_state(jax.random.PRNGKey(0), cfg))
+    v, resumed = client.restart_latest(template)
+    assert v == 9
+
+    from repro.core import restart as rst
+    from repro.core.capture import tree_from_regions
+    regs6 = rst.load_rank_regions(client.cluster, vc.name, 6, 0)
+    state6 = tree_from_regions(template, regs6)
+    replay, _ = _run(cfg, None, steps=9, start_state=state6, start=6)
+    for a, b in zip(jax.tree.leaves(final["params"]),
+                    jax.tree.leaves(replay["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpoint_equals_sync(tmp_path):
+    """The async pipeline must persist exactly the same bytes as sync."""
+    cfg = smoke_config("veloc-demo-100m")
+    state = init_train_state(jax.random.PRNGKey(3), cfg)
+    outs = {}
+    for mode in ("sync", "async"):
+        vc = VelocConfig(scratch=str(tmp_path / mode), mode=mode,
+                         partner=False, xor_group=0)
+        c = VelocClient(vc)
+        c.checkpoint(state, version=1)
+        assert c.wait(1, timeout=60)
+        if c.backend:
+            assert not c.backend.errors()
+        blob = c.cluster.fetch_shard(vc.name, 1, 0)
+        assert blob is not None
+        outs[mode] = blob
+        c.shutdown()
+    assert outs["sync"] == outs["async"]
+
+
+def test_async_blocking_time_is_small(tmp_path):
+    """VELOC semantics: the app blocks for the L1 snapshot only."""
+    cfg = smoke_config("veloc-demo-100m")
+    state = init_train_state(jax.random.PRNGKey(1), cfg)
+    vc = VelocConfig(scratch=str(tmp_path), mode="async", partner=False,
+                     xor_group=0, encoding="zlib")
+    c = VelocClient(vc)
+    snap = jax.tree.map(lambda x: x, state)  # pretend fused-capture output
+    ctx = c.checkpoint(state, version=1, snap=snap)
+    blocking = ctx.results["app_blocking_s"]
+    assert c.wait(1, timeout=60)
+    assert blocking < 0.5  # serialize+compress+write happen in the backend
+    c.shutdown()
+
+
+def test_quantized_checkpoint_restores_close(tmp_path):
+    cfg = smoke_config("veloc-demo-100m")
+    state = init_train_state(jax.random.PRNGKey(2), cfg)
+    vc = VelocConfig(scratch=str(tmp_path), mode="sync", partner=False,
+                     xor_group=0, encoding="q8")
+    c = VelocClient(vc)
+    c.checkpoint(state, version=1)
+    v, restored = c.restart_latest(state)
+    assert v == 1
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(restored["params"])):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        scale = max(np.abs(a).max(), 1e-6)
+        assert np.abs(a - b).max() / scale < 0.02
+
+
+def test_productive_branching(tmp_path):
+    """DataStates branch/explore: clone a snapshot, train two branches, the
+    lineage records both and best() finds the better one."""
+    cfg = smoke_config("veloc-demo-100m")
+    vc = VelocConfig(scratch=str(tmp_path), mode="sync", partner=False,
+                     xor_group=0, keep_versions=20)
+    client = VelocClient(vc)
+    ds = DataStates(client.cluster)
+    state, losses = _run(cfg, client, steps=3)
+    root = ds.record(3, metrics={"loss": losses[-1]})
+
+    template = jax.eval_shape(lambda: init_train_state(jax.random.PRNGKey(0), cfg))
+    _, base = client.restart_latest(template)
+    for branch, seed in (("lr-a", 11), ("lr-b", 12)):
+        ds.clone(root.id, branch)
+        st, ls = _run(cfg, None, steps=6, start_state=base, start=3,
+                      stream_seed=seed)
+        client.checkpoint(st, version=100 + seed, defensive=False)
+        ds.record(100 + seed, branch=branch, metrics={"loss": ls[-1]})
+    best = ds.best("loss")
+    assert best is not None
+    tips = ds.search(lambda s: s.branch == "lr-a" and "clone" not in s.tags)
+    assert len(tips) == 1
+    assert len(ds.lineage(tips[0].id)) == 3  # root -> clone -> tip
+    assert ds.lineage(tips[0].id)[0].branch == "main"
+
+
+def test_low_level_veloc_api(tmp_path):
+    """The paper's C-style API: protect / checkpoint_begin / mem / end."""
+    vc = VelocConfig(scratch=str(tmp_path), mode="sync", partner=False,
+                     xor_group=0)
+    c = VelocClient(vc)
+    w = jnp.arange(100, dtype=jnp.float32)
+    b = jnp.ones((5,), jnp.float32)
+    c.protect("w", w)
+    c.protect("b", b)
+    c.checkpoint_begin(1)
+    c.checkpoint_mem()
+    ctx = c.checkpoint_end()
+    assert not ctx.skipped
+    from repro.core import restart as rst
+    regs = rst.load_rank_regions(c.cluster, vc.name, 1, 0)
+    np.testing.assert_array_equal(regs["w/"], np.asarray(w))
+    np.testing.assert_array_equal(regs["b/"], np.asarray(b))
