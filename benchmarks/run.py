@@ -50,13 +50,13 @@ def _timeit(fn, n=5, warmup=1):
 
 
 def bench_levels():
-    from repro.core import Cluster, VelocConfig
+    from repro.core import Cluster, TierTopology
     from repro.core.capture import snapshot_device
     from repro.core.format import Region, serialize_shard
 
     root = "/tmp/veloc_bench_levels"
     shutil.rmtree(root, ignore_errors=True)
-    cluster = Cluster(VelocConfig(scratch=root), nranks=1)
+    cluster = Cluster(TierTopology(scratch=root), nranks=1)
     for mb in (16, 64):
         n = mb * (1 << 20) // 4
         state = {"w": jnp.arange(n, dtype=jnp.float32)}
@@ -83,7 +83,7 @@ def bench_levels():
 def bench_async():
     """Per-step overhead: no ckpt vs sync-to-PFS (baseline) vs VELOC async."""
     from repro.configs.base import ShapeCfg, smoke_config
-    from repro.core import VelocClient, VelocConfig
+    from repro.core import ModuleSpec, PipelineSpec, VelocClient
     from repro.train.data import SyntheticStream
     from repro.train.steps import init_train_state, make_train_step
 
@@ -97,9 +97,10 @@ def bench_async():
         shutil.rmtree(root, ignore_errors=True)
         client = None
         if mode != "off":
-            client = VelocClient(VelocConfig(
-                scratch=root, mode="sync" if mode == "sync" else "async",
-                partner=False, xor_group=0, flush=True))
+            client = VelocClient(PipelineSpec(
+                mode="sync" if mode == "sync" else "async",
+                modules=[ModuleSpec("serialize"), ModuleSpec("local"),
+                         ModuleSpec("flush")]), scratch=root)
         state = init_train_state(jax.random.PRNGKey(0), cfg)
         step = jax.jit(make_train_step(cfg, capture=mode == "async"))
         out = step(state, batches[0])  # warmup/compile

@@ -16,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 from repro.configs.base import ShapeCfg, get_config
-from repro.core import DataStates, VelocClient, VelocConfig
+from repro.core import DataStates, ModuleSpec, PipelineSpec, VelocClient
 from repro.train.data import SyntheticStream
 from repro.train.steps import init_train_state, make_train_step
 
@@ -28,8 +28,10 @@ cfg = get_config("veloc-demo-100m").replace(num_layers=4, d_model=256,
 shape = ShapeCfg("ex", 128, 8, "train")
 stream = SyntheticStream(cfg, shape, seed=5)
 
-client = VelocClient(VelocConfig(name="explore", scratch=SCRATCH, mode="sync",
-                                 partner=False, xor_group=0, keep_versions=20))
+client = VelocClient(PipelineSpec(
+    name="explore", mode="sync", keep_versions=20,
+    modules=[ModuleSpec("serialize"), ModuleSpec("local"),
+             ModuleSpec("flush")]), scratch=SCRATCH)
 ds = DataStates(client.cluster)
 
 

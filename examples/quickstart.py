@@ -1,6 +1,10 @@
-"""Quickstart: the VELOC API in 40 lines.
+"""Quickstart: the VELOC v2 API in 50 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The pipeline and the storage layout are *declarative*: a PipelineSpec lists
+registered resilience modules + options, a TierTopology lists the storage
+tiers, and checkpoint() returns a CheckpointFuture completion handle.
 """
 import os
 import shutil
@@ -11,15 +15,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core import VelocClient, VelocConfig
+from repro.core import (Cluster, ModuleSpec, PipelineSpec, TierTopology,
+                        VelocClient)
 
 SCRATCH = "/tmp/veloc_quickstart"
 shutil.rmtree(SCRATCH, ignore_errors=True)
 
-# 1. configure: async multi-level (L1 local, L3 external flush), checksums on
-cfg = VelocConfig(name="quickstart", scratch=SCRATCH, mode="async",
-                  partner=False, xor_group=0, encoding="zlib")
-client = VelocClient(cfg)
+# 1. declare the pipeline (async multi-level: L1 local write + L3 external
+#    flush, zlib compression) and the tier layout (default DRAM + node SSD
+#    + shared PFS); new modules/tiers plug in via the registries.
+pipeline = PipelineSpec(name="quickstart", mode="async", modules=[
+    ModuleSpec("serialize", {"encoding": "zlib"}),
+    ModuleSpec("local"),
+    ModuleSpec("flush"),
+])
+client = VelocClient(pipeline, Cluster(TierTopology(scratch=SCRATCH)))
 
 # 2. your application state: any JAX pytree (sharded arrays welcome)
 state = {
@@ -29,13 +39,21 @@ state = {
 }
 
 # 3. checkpoint: blocks only for the on-device snapshot; serialization,
-#    compression, checksumming and the external flush drain in the backend
+#    compression, checksumming and the external flush drain in the backend.
+#    The returned CheckpointFuture tracks the in-flight pipeline.
+futures = []
 for step in range(1, 4):
     state["step"] = jnp.asarray(step)
-    ctx = client.checkpoint(state, version=step, meta={"step": step})
-    print(f"v{step}: app blocked {ctx.results['app_blocking_s']*1e3:.2f} ms")
+    fut = client.checkpoint(state, version=step, meta={"step": step})
+    futures.append(fut)
+    print(f"v{step}: app blocked {fut.results['app_blocking_s']*1e3:.2f} ms")
 
-client.wait()  # join the background pipeline
+# join per level or whole-pipeline; result() surfaces backend errors
+assert futures[-1].wait_level("L1", timeout=60)  # local copy durable
+futures[-1].result(timeout=60)                   # whole pipeline drained
+print(f"v3 done={futures[-1].done()} levels: "
+      f"L1={futures[-1].level_event('L1').is_set()} "
+      f"L3={futures[-1].level_event('L3').is_set()}")
 
 # 4. restart: newest restorable version, checksums verified on read
 version, restored = client.restart_latest(state)
@@ -46,7 +64,6 @@ assert version == 3 and int(restored["step"]) == 3
 client.protect("w", state["params"]["w"])
 client.checkpoint_begin(4)
 client.checkpoint_mem()
-client.checkpoint_end()
-client.wait()
+client.checkpoint_end().result(timeout=60)
 print("low-level API checkpoint v4 done")
 client.shutdown()

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import VelocClient, VelocConfig
+from repro.core import ModuleSpec, PipelineSpec, VelocClient
 from repro.models.model import cache_init, init_model, make_decode_fn
 
 SCRATCH = "/tmp/veloc_serve"
@@ -29,8 +29,9 @@ params = init_model(jax.random.PRNGKey(0), cfg)
 decode = jax.jit(make_decode_fn(cfg))
 cache = cache_init(cfg, B, S)
 
-client = VelocClient(VelocConfig(name="serve", scratch=SCRATCH, mode="async",
-                                 partner=False, xor_group=0))
+client = VelocClient(PipelineSpec(name="serve", mode="async", modules=[
+    ModuleSpec("serialize"), ModuleSpec("local"), ModuleSpec("flush")]),
+    scratch=SCRATCH)
 
 rng = np.random.default_rng(0)
 tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
@@ -42,14 +43,14 @@ for pos in range(24):
     if pos == 11:
         # live replication: snapshot the FULL serving state (weights + the
         # in-flight KV caches) without pausing the decode loop
-        ctx = client.checkpoint({"params": params, "cache": cache,
-                                 "tok": tok, "pos": jnp.asarray(pos)},
-                                version=1, meta={"pos": pos})
+        clone_fut = client.checkpoint({"params": params, "cache": cache,
+                                       "tok": tok, "pos": jnp.asarray(pos)},
+                                      version=1, meta={"pos": pos})
         print(f"cloned serving state @pos={pos} "
-              f"(blocked {ctx.results['app_blocking_s']*1e3:.2f} ms)")
+              f"(blocked {clone_fut.results['app_blocking_s']*1e3:.2f} ms)")
 
 primary = jnp.concatenate(outputs, axis=1)
-client.wait()
+clone_fut.result(timeout=120)  # join the replication pipeline
 
 # --- replica server re-hydrates and continues the same streams --------------
 template = {"params": jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg)),

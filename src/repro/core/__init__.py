@@ -1,3 +1,8 @@
 """VELOC core: very low overhead multi-level asynchronous checkpointing."""
 from repro.core.api import Cluster, VelocClient, VelocConfig, make_client  # noqa: F401
 from repro.core.datastates import DataStates, Snapshot  # noqa: F401
+from repro.core.future import CheckpointError, CheckpointFuture  # noqa: F401
+from repro.core.pipeline import (MODULES, ModuleRegistry, ModuleSpec,  # noqa: F401
+                                 PipelineSpec, register_module)
+from repro.core.storage import (TIERS, TierRegistry, TierSpec,  # noqa: F401
+                                TierTopology, register_tier)

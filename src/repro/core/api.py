@@ -5,6 +5,18 @@ checkpoint_mem / checkpoint_end / restart_*) plus a pythonic high-level pair
 ``checkpoint(state, version)`` / ``restart_latest(template)`` for JAX
 pytrees.
 
+v2 surface: the client is configured by a declarative ``PipelineSpec``
+(which modules run, with what options — see repro.core.pipeline) over a
+``Cluster`` built from a ``TierTopology`` (which storage tiers exist where —
+see repro.core.storage), and ``checkpoint`` / ``checkpoint_end`` return a
+``CheckpointFuture`` completion handle (repro.core.future).
+
+``VelocConfig`` remains as a *legacy convenience shim*: it is a closed set
+of switches that compiles down to the open specs via ``to_pipeline_spec()``
+/ ``to_tier_topology()`` and produces byte-identical on-disk layouts.
+Prefer the specs for new code — new modules and tier kinds only plug in
+there.
+
 Async semantics are the paper's: ``checkpoint`` blocks only while the L1
 device snapshot is taken (an in-HLO HBM copy when the caller passes the
 fused-capture output); D2H, serialization, local persist, partner/XOR and
@@ -12,27 +24,34 @@ the external flush all run in the ActiveBackend.
 """
 from __future__ import annotations
 
-import os
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
-
-import numpy as np
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Union
 
 from repro.core import format as fmt
 from repro.core.backend import ActiveBackend, RateLimiter
 from repro.core.capture import iter_host_regions, snapshot_device, tree_from_regions
-from repro.core.engine import Engine
-from repro.core.modules import (CheckpointContext, FlushModule, IntervalModule,
-                                LocalWriteModule, PartnerModule, SerializeModule,
-                                VerifyModule, XorGroupModule)
+from repro.core.future import CheckpointFuture
+from repro.core.modules import CheckpointContext
 from repro.core.phases import EMAPhasePredictor, GRUPhasePredictor
-from repro.core.storage import DRAMTier, FileTier, KVTier, StorageTier
+from repro.core.pipeline import ModuleSpec, PipelineSpec
+from repro.core.storage import (StorageTier, TierSpec, TierTopology,
+                                default_external_specs, default_node_specs)
 
 
 @dataclass
 class VelocConfig:
+    """Legacy closed-set configuration (deprecated in favour of the specs).
+
+    Kept as a thin convenience: every field maps onto the open v2 surface
+    through ``to_pipeline_spec()`` + ``to_tier_topology()``, and
+    ``VelocClient(VelocConfig(...))`` routes through exactly that mapping —
+    the on-disk layout is byte-identical to the historical behaviour.  New
+    resilience modules or storage tiers cannot be expressed here; use
+    ``PipelineSpec`` / ``TierTopology`` directly for those.
+    """
+
     name: str = "ckpt"
     mode: str = "async"                 # async | sync
     scratch: str = "/tmp/veloc"         # node-local + external roots
@@ -51,33 +70,73 @@ class VelocConfig:
     use_kv_external: bool = False       # add the DAOS-style KV tier
     keep_versions: int = 3              # GC horizon
 
+    # -- compilation to the v2 specs ------------------------------------
+    def to_pipeline_spec(self) -> PipelineSpec:
+        """Compile the boolean switches into the declarative module list."""
+        mods = [ModuleSpec("interval", {"interval_s": self.interval_s}),
+                ModuleSpec("serialize", {"encoding": self.encoding,
+                                         "checksums": self.checksums}),
+                ModuleSpec("local")]
+        if self.partner:
+            mods.append(ModuleSpec("partner",
+                                   {"distance": self.partner_distance}))
+        if self.xor_group >= 2:
+            mods.append(ModuleSpec("xor", {"group_size": self.xor_group,
+                                           "rs_parity": self.rs_parity}))
+        if self.flush:
+            mods.append(ModuleSpec("flush"))
+        if self.verify:
+            mods.append(ModuleSpec("verify"))
+        # async mode: only the interval gate blocks the app (priority<=5);
+        # sync mode: the whole pipeline runs inline.
+        return PipelineSpec(name=self.name, mode=self.mode, modules=mods,
+                            blocking_cut=5,
+                            backend_workers=self.backend_workers,
+                            phase_predictor=self.phase_predictor,
+                            keep_versions=self.keep_versions)
+
+    def to_tier_topology(self) -> TierTopology:
+        """Compile the storage switches into the declarative tier layout
+        (the default DRAM + node-local SSD + shared PFS, optionally + KV)."""
+        external = default_external_specs()
+        if self.use_kv_external:
+            external.append(TierSpec("kv", name="kv", gbps=2.0,
+                                     options={"journal": "kvstore"}))
+        return TierTopology(scratch=self.scratch, node=default_node_specs(),
+                            external=external)
+
 
 class Cluster:
     """Storage fabric + collective-commit coordination for ``nranks``
     simulated nodes (one process).  On a real deployment this maps to: node
     tiers = each host's DRAM/NVMe; external tiers = the shared PFS/DAOS;
-    note_shard coordination via the shared file system."""
+    note_shard coordination via the shared file system.
 
-    def __init__(self, cfg: VelocConfig, nranks: int = 1):
-        self.cfg = cfg
+    Built from a ``TierTopology`` (v2) or a legacy ``VelocConfig`` (which
+    compiles to one).  ``group_size`` is the erasure-group width recorded in
+    manifests and used to locate parity homes; with a VelocConfig it
+    defaults to ``cfg.xor_group``.
+    """
+
+    def __init__(self, topology: Union[TierTopology, VelocConfig],
+                 nranks: int = 1, *, group_size: Optional[int] = None,
+                 rate_limit_bps: Optional[float] = None):
+        if isinstance(topology, VelocConfig):
+            self.cfg: Optional[VelocConfig] = topology
+            if group_size is None:
+                group_size = topology.xor_group
+            if rate_limit_bps is None:
+                rate_limit_bps = topology.rate_limit_bps
+            topology = topology.to_tier_topology()
+        else:
+            self.cfg = None
+        self.topology = topology
         self.nranks = nranks
+        self.group_size = int(group_size or 0)
         self._lock = threading.Lock()
-        root = cfg.scratch
-        self._node_tiers = []
-        for r in range(nranks):
-            self._node_tiers.append([
-                DRAMTier(name=f"dram{r}", gbps=100.0),
-                FileTier(os.path.join(root, f"node{r}"), name=f"ssd{r}",
-                         gbps=3.0, persistent=True, node_local=True),
-            ])
-        self.external_tiers: list[StorageTier] = [
-            FileTier(os.path.join(root, "pfs"), name="pfs", gbps=1.0,
-                     persistent=True, node_local=False)]
-        if cfg.use_kv_external:
-            self.external_tiers.append(
-                KVTier(name="kv", gbps=2.0,
-                       journal=os.path.join(root, "kvstore")))
-        self.rate_limiter = RateLimiter(cfg.rate_limit_bps)
+        self._node_tiers = [topology.build_node(r) for r in range(nranks)]
+        self.external_tiers: list[StorageTier] = topology.build_external()
+        self.rate_limiter = RateLimiter(rate_limit_bps)
         self.phase_gate: Optional[Callable[[], float]] = None
         # registry[(name, version, level)] = {rank: digest}
         self._registry: dict[tuple, dict[int, str]] = {}
@@ -110,7 +169,7 @@ class Cluster:
     def fetch_parity(self, name: str, version: int, group: int) -> Optional[bytes]:
         from repro.core.erasure import parity_home
 
-        g = min(self.cfg.xor_group, self.nranks)
+        g = min(self.group_size, self.nranks)
         home = parity_home(group, g, self.nranks) if g >= 2 else -1
         key = fmt.parity_key(name, version, group)
         tiers = (self._node_tiers[home] if 0 <= home < self.nranks else []) \
@@ -133,7 +192,7 @@ class Cluster:
                 blob = fmt.make_manifest(
                     name, version, self.nranks, level=level,
                     shard_digests=reg, meta=self._meta.get((name, version), {}),
-                    group_size=self.cfg.xor_group)
+                    group_size=self.group_size)
                 key = fmt.manifest_key(name, version) + f".{level}"
                 for tier in self.external_tiers:
                     tier.put(key, blob)
@@ -156,60 +215,88 @@ class Cluster:
             tier.wipe()
 
     def gc(self, name: str, keep: int):
+        """Drop every artifact of versions beyond the ``keep`` newest:
+        shards, partner copies, parity blobs and per-level manifests, on
+        node-local AND external tiers (prefix delete per version)."""
         with self._lock:
             versions = sorted({v for (n, v, _l) in self._registry if n == name},
                               reverse=True)
             drop = versions[keep:]
             for v in drop:
-                for r in range(self.nranks):
-                    key = fmt.shard_key(name, v, r)
-                    for tier in self._node_tiers[r] + self.external_tiers:
+                prefix = fmt.version_prefix(name, v)
+                for tiers in self._node_tiers:
+                    for tier in tiers:
+                        for key in tier.keys(prefix):
+                            tier.delete(key)
+                for tier in self.external_tiers:
+                    for key in tier.keys(prefix):
                         tier.delete(key)
-                        tier.delete(key + ".partner")
                 for k in [k for k in self._registry if k[0] == name and k[1] == v]:
                     self._registry.pop(k, None)
+                self._meta.pop((name, v), None)
 
 
 class VelocClient:
-    """Per-rank checkpointing client (paper §2 API)."""
+    """Per-rank checkpointing client (paper §2 API).
 
-    def __init__(self, cfg: VelocConfig, cluster: Optional[Cluster] = None,
-                 rank: int = 0, mesh=None):
-        self.cfg = cfg
-        self.cluster = cluster or Cluster(cfg, nranks=1)
+    Construct from a ``PipelineSpec`` (v2) or a legacy ``VelocConfig``
+    (compiled through the shim).  When no ``cluster`` is given, a 1-rank
+    cluster is built — from the config's topology in legacy mode, or from
+    the default ``TierTopology`` rooted at ``scratch`` in v2 mode.
+    """
+
+    def __init__(self, cfg: Union[PipelineSpec, VelocConfig],
+                 cluster: Optional[Cluster] = None, rank: int = 0, mesh=None,
+                 *, scratch: str = "/tmp/veloc"):
+        if isinstance(cfg, VelocConfig):
+            self.cfg: Optional[VelocConfig] = cfg
+            self.spec = cfg.to_pipeline_spec()
+        elif isinstance(cfg, PipelineSpec):
+            self.cfg = None
+            self.spec = cfg
+        else:
+            raise TypeError(
+                f"expected PipelineSpec or VelocConfig, got {type(cfg)!r}")
+        spec = self.spec
+        if cluster is None:
+            if self.cfg is not None:
+                cluster = Cluster(self.cfg, nranks=1)
+            else:
+                cluster = Cluster(TierTopology(scratch=scratch), nranks=1,
+                                  group_size=spec.erasure_group_size())
+        elif cluster.group_size == 0 and spec.erasure_group_size():
+            # caller built the cluster without stating a group size but the
+            # pipeline erasure-encodes: adopt the pipeline's width so
+            # manifests and parity lookups agree with what gets written
+            # (every rank shares the cluster and derives the same value).
+            cluster.group_size = spec.erasure_group_size()
+        self.cluster = cluster
         self.rank = rank
         self.mesh = mesh
+        self.name = spec.name
         self._protected: dict[str, Any] = {}
         self._open_version: Optional[int] = None
         self._staged: list[fmt.Region] = []
+        partner_opts = spec.module_options("partner") or {}
+        self._partner_distance = partner_opts.get("distance", 1)
         self.predictor = None
-        if cfg.phase_predictor == "ema":
+        if spec.phase_predictor == "ema":
             self.predictor = EMAPhasePredictor()
-        elif cfg.phase_predictor == "gru":
+        elif spec.phase_predictor == "gru":
             self.predictor = GRUPhasePredictor()
         if self.predictor is not None:
             self.cluster.phase_gate = self.predictor.idle_wait
         self.backend = None
-        if cfg.mode == "async":
+        if spec.mode == "async":
             self.backend = ActiveBackend(
-                workers=cfg.backend_workers,
+                workers=spec.backend_workers,
                 rate_limiter=self.cluster.rate_limiter,
                 phase_gate=self.cluster.phase_gate)
-        mods = [IntervalModule(cfg.interval_s),
-                SerializeModule(cfg.encoding, cfg.checksums),
-                LocalWriteModule()]
-        if cfg.partner:
-            mods.append(PartnerModule(cfg.partner_distance))
-        if cfg.xor_group >= 2:
-            mods.append(XorGroupModule(cfg.xor_group, cfg.rs_parity))
-        if cfg.flush:
-            mods.append(FlushModule())
-        if cfg.verify:
-            mods.append(VerifyModule())
-        # async mode: only the interval gate blocks the app (priority<=5);
-        # sync mode: the whole pipeline runs inline.
-        self.engine = Engine(mods, self.backend, blocking_cut=5)
+        self.engine = spec.compile(backend=self.backend)
         self._history: list[dict] = []
+        #: (version, level, error) entries for every restore candidate that
+        #: was tried and failed during the last ``restart_latest`` call.
+        self.restart_diagnostics: list[dict] = []
 
     # ------------------------------------------------------------------
     # low-level VELOC-style API
@@ -233,7 +320,8 @@ class VelocClient:
             for r in iter_host_regions(value, rank_prefix=f"{name}/"):
                 self._staged.append(r)
 
-    def checkpoint_end(self, *, defensive: bool = True, meta=None) -> CheckpointContext:
+    def checkpoint_end(self, *, defensive: bool = True, meta=None
+                       ) -> CheckpointFuture:
         assert self._open_version is not None
         version = self._open_version
         self._open_version = None
@@ -245,38 +333,39 @@ class VelocClient:
     # high-level pytree API
     # ------------------------------------------------------------------
     def checkpoint(self, state, version: int, *, snap=None, defensive: bool = True,
-                   meta=None, device_snapshot: bool = True) -> CheckpointContext:
+                   meta=None, device_snapshot: bool = True) -> CheckpointFuture:
         """Checkpoint a (possibly device-resident, sharded) pytree.
 
         Blocking work: the on-device snapshot copy only (or nothing, when the
         caller passes the fused-capture ``snap``).  Everything else drains in
-        the backend."""
+        the backend; track it through the returned ``CheckpointFuture``."""
         t0 = time.monotonic()
         if snap is None:
             snap = snapshot_device(state) if device_snapshot else state
-        if self.cfg.mode == "async":
+        if self.spec.mode == "async":
             regions: Any = lambda: list(iter_host_regions(snap))
         else:
             regions = list(iter_host_regions(snap))
-        ctx = self._submit(regions, version, defensive=defensive, meta=meta)
-        ctx.results["app_blocking_s"] = time.monotonic() - t0
-        return ctx
+        fut = self._submit(regions, version, defensive=defensive, meta=meta)
+        fut.results["app_blocking_s"] = time.monotonic() - t0
+        return fut
 
-    def _submit(self, regions, version, *, defensive, meta) -> CheckpointContext:
+    def _submit(self, regions, version, *, defensive, meta) -> CheckpointFuture:
         ctx = CheckpointContext(
-            name=self.cfg.name, version=version, rank=self.rank,
+            name=self.name, version=version, rank=self.rank,
             nranks=self.cluster.nranks, regions=regions,
             meta=dict(meta or {}), cluster=self.cluster, defensive=defensive)
-        self.engine.submit(ctx)
+        fut = CheckpointFuture(ctx)
+        self.engine.submit(ctx, future=fut)
         self._history.append({"version": version, "skipped": ctx.skipped,
                               "blocking_s": ctx.results.get("blocking_s")})
-        if self.cfg.keep_versions:
-            self.cluster.gc(self.cfg.name, self.cfg.keep_versions + 1)
-        return ctx
+        if self.spec.keep_versions:
+            self.cluster.gc(self.name, self.spec.keep_versions + 1)
+        return fut
 
     def wait(self, version: Optional[int] = None, timeout: Optional[float] = None
              ) -> bool:
-        return self.engine.wait(self.cfg.name, self.rank, version, timeout)
+        return self.engine.wait(self.name, self.rank, version, timeout)
 
     def tick(self, phase: str):
         if self.predictor is not None:
@@ -285,18 +374,25 @@ class VelocClient:
     # ------------------------------------------------------------------
     def restart_latest(self, template, shardings=None):
         """Find the newest restorable version and rebuild the pytree.
-        Returns (version, state) or (None, None)."""
+        Returns (version, state) or (None, None).  Every candidate that was
+        tried and failed is recorded in ``self.restart_diagnostics`` as
+        {"version", "level", "error"} so operators can see why a version
+        was skipped."""
         from repro.core import restart
 
-        found = restart.find_restart(self.cluster, self.cfg.name)
+        self.restart_diagnostics = []
+        found = restart.find_restart(self.cluster, self.name)
         for cand in found:
             try:
                 regions = restart.load_rank_regions(
-                    self.cluster, self.cfg.name, cand["version"], self.rank,
-                    distance=self.cfg.partner_distance)
+                    self.cluster, self.name, cand["version"], self.rank,
+                    distance=self._partner_distance)
                 state = tree_from_regions(template, regions, shardings)
                 return cand["version"], state
-            except Exception:  # noqa: BLE001 — fall back a level/version
+            except Exception as e:  # noqa: BLE001 — fall back a level/version
+                self.restart_diagnostics.append({
+                    "version": cand["version"], "level": cand.get("level"),
+                    "error": f"{type(e).__name__}: {e}"})
                 continue
         return None, None
 
@@ -305,6 +401,7 @@ class VelocClient:
             self.backend.shutdown()
 
 
-def make_client(cfg: Optional[VelocConfig] = None, **kw) -> VelocClient:
+def make_client(cfg: Optional[Union[PipelineSpec, VelocConfig]] = None,
+                **kw) -> VelocClient:
     cfg = cfg or VelocConfig(**kw)
     return VelocClient(cfg)

@@ -61,6 +61,7 @@ class _Task:
     kind: str = field(compare=False)
     fn: Callable = field(compare=False)
     deadline: Optional[float] = field(compare=False, default=None)
+    on_drop: Optional[Callable] = field(compare=False, default=None)
 
 
 class TaskError(Exception):
@@ -90,8 +91,12 @@ class ActiveBackend:
 
     # ------------------------------------------------------------------
     def submit(self, kind: str, version: int, fn: Callable, *, priority: int = 50,
-               deadline_s: Optional[float] = None, supersede: bool = False):
-        """supersede=True drops queued (not running) older versions of kind."""
+               deadline_s: Optional[float] = None, supersede: bool = False,
+               on_drop: Optional[Callable] = None):
+        """supersede=True drops queued (not running) older versions of kind.
+        ``on_drop`` fires if THIS task is later dropped by a superseding
+        submit (so completion handles don't hang on preempted versions)."""
+        dropped = []
         with self._cv:
             if self._stop:
                 raise RuntimeError("backend stopped")
@@ -101,6 +106,8 @@ class ActiveBackend:
                 for t in self._heap:
                     if t.kind == kind and t.version < version:
                         self._done[(t.kind, t.version)] = "superseded"
+                        if t.on_drop is not None:
+                            dropped.append(t.on_drop)
                     else:
                         kept.append(t)
                 if len(kept) != before:
@@ -109,9 +116,11 @@ class ActiveBackend:
             self._seq += 1
             dl = time.monotonic() + deadline_s if deadline_s else None
             heapq.heappush(self._heap, _Task(priority, self._seq, version, kind,
-                                             fn, dl))
+                                             fn, dl, on_drop))
             self._latest[kind] = max(self._latest.get(kind, -1), version)
             self._cv.notify()
+        for cb in dropped:  # outside the lock: callbacks may block/log
+            cb()
 
     def _worker(self):
         while True:

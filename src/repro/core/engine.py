@@ -6,6 +6,11 @@ modules up to ``blocking_cut`` priority run inline — VELOC semantics block
 the application only until the fastest level holds the checkpoint — and the
 remainder is handed to the ActiveBackend worker, newest-version preemption
 included.
+
+``submit`` optionally takes a ``CheckpointFuture``; the engine finishes it
+when the pipeline drains (or fails), fires its per-level completion events
+as level-tagged modules succeed, and marks it superseded when a newer
+version preempts it in the backend queue.
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ import time
 from typing import Optional
 
 from repro.core.backend import ActiveBackend
+from repro.core.future import CheckpointFuture
 from repro.core.modules import CheckpointContext, Module
 
 
@@ -33,7 +39,8 @@ class Engine:
         self.module(name).enabled = enabled
 
     # ------------------------------------------------------------------
-    def _run(self, mods, ctx: CheckpointContext):
+    def _run(self, mods, ctx: CheckpointContext,
+             future: Optional[CheckpointFuture] = None):
         for m in mods:
             if not m.enabled:
                 continue
@@ -46,21 +53,51 @@ class Engine:
                 # must not take the pipeline down; level tags tell restart
                 # what is trustworthy.
                 ctx.results.setdefault("errors", []).append(m.name)
+            elif status == "ok" and future is not None and m.level:
+                future._level_done(m.level)
 
-    def submit(self, ctx: CheckpointContext) -> CheckpointContext:
+    def submit(self, ctx: CheckpointContext,
+               future: Optional[CheckpointFuture] = None) -> CheckpointContext:
         front = [m for m in self.modules if m.priority <= self.blocking_cut]
         rest = [m for m in self.modules if m.priority > self.blocking_cut]
-        self._run(front, ctx)
+        try:
+            self._run(front, ctx, future)
+        except Exception as e:
+            if future is not None:
+                future._finish(e)
+            raise
         ctx.results["blocking_s"] = time.monotonic() - ctx.t_begin
         if ctx.skipped:
+            if future is not None:
+                future._finish()
             return ctx
         if self.backend is None:
-            self._run(rest, ctx)
+            try:
+                self._run(rest, ctx, future)
+            except Exception as e:
+                if future is not None:
+                    future._finish(e)
+                raise
+            if future is not None:
+                future._finish()
         else:
+            def run_rest():
+                try:
+                    self._run(rest, ctx, future)
+                except Exception as e:
+                    if future is not None:
+                        future._finish(e)
+                    raise  # the backend records it too (backend.errors())
+                else:
+                    if future is not None:
+                        future._finish()
+
+            on_drop = None
+            if future is not None:
+                on_drop = lambda: future._finish(superseded=True)  # noqa: E731
             self.backend.submit(
-                f"pipe:{ctx.name}:{ctx.rank}", ctx.version,
-                lambda: self._run(rest, ctx),
-                priority=50, supersede=True)
+                f"pipe:{ctx.name}:{ctx.rank}", ctx.version, run_rest,
+                priority=50, supersede=True, on_drop=on_drop)
         return ctx
 
     def wait(self, name: str, rank: int, version: Optional[int] = None,

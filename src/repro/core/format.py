@@ -129,6 +129,12 @@ class ShardReader:
 # ---------------------------------------------------------------------------
 
 
+def version_prefix(name: str, version: int) -> str:
+    """Key prefix shared by every artifact of one checkpoint version
+    (shards, partner copies, parity blobs, per-level manifests)."""
+    return f"{name}/v{version:08d}/"
+
+
 def manifest_key(name: str, version: int) -> str:
     return f"{name}/v{version:08d}/manifest"
 

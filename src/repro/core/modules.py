@@ -7,6 +7,12 @@ module acts or passes based on its own state and the outcome of earlier
 modules (recorded in ``ctx.results``).  Modules toggle at runtime via
 ``enabled`` — the paper's "simple switch" — and custom modules (compression,
 integrity, format conversion) slot in by priority.
+
+Built-ins register in the default ``ModuleRegistry`` (repro.core.pipeline)
+under short names — "interval", "serialize", "local", "partner", "xor",
+"flush", "verify" — so a ``PipelineSpec`` can name them declaratively.
+Modules that complete a resilience level carry a ``level`` tag ("L1"/"L2"/
+"L3") used by ``CheckpointFuture`` per-level completion events.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core import erasure, format as fmt
+from repro.core.pipeline import register_module
 from repro.core.storage import StorageTier, pick_tier
 from repro.kernels import ops as kops
 
@@ -42,6 +49,7 @@ class Module:
     name = "module"
     priority = 50
     enabled = True
+    level: Optional[str] = None  # resilience level this module completes
 
     def process(self, ctx: CheckpointContext) -> str:
         raise NotImplementedError
@@ -51,6 +59,7 @@ class Module:
                f"{'on' if self.enabled else 'off'}>"
 
 
+@register_module("interval")
 class IntervalModule(Module):
     """Skips defensive checkpoints arriving before the optimal interval
     (interval supplied by repro.core.interval — Young/Daly or the ML
@@ -76,6 +85,7 @@ class IntervalModule(Module):
         return "ok"
 
 
+@register_module("serialize")
 class SerializeModule(Module):
     """Regions -> shard bytes (repro.core.format), with the encoding chosen
     by the compression switch ("raw" | "q8" | "zlib")."""
@@ -100,12 +110,14 @@ class SerializeModule(Module):
         return "ok"
 
 
+@register_module("local")
 class LocalWriteModule(Module):
     """L1: persist the shard to the best node-local tier (pick_tier encodes
     the heterogeneous-storage scheduling)."""
 
     name = "l1-local"
     priority = 20
+    level = "L1"
 
     def process(self, ctx):
         tiers = ctx.cluster.node_tiers(ctx.rank)
@@ -117,12 +129,14 @@ class LocalWriteModule(Module):
         return "ok"
 
 
+@register_module("partner")
 class PartnerModule(Module):
     """L2a: partner replication — push my shard into my partner's node-local
     storage so a lost node's state survives on its neighbour."""
 
     name = "l2-partner"
     priority = 30
+    level = "L2"
 
     def __init__(self, distance: int = 1):
         self.distance = distance
@@ -139,6 +153,7 @@ class PartnerModule(Module):
         return "ok"
 
 
+@register_module("xor")
 class XorGroupModule(Module):
     """L2b: XOR (or RS) erasure encoding across a group of ranks.  The group
     leader pulls the group's shards (network stand-in: the cluster registry)
@@ -147,6 +162,7 @@ class XorGroupModule(Module):
 
     name = "l2-xor"
     priority = 32
+    level = "L2"
 
     def __init__(self, group_size: int = 4, rs_parity: int = 0):
         self.group_size = group_size
@@ -192,6 +208,7 @@ class XorGroupModule(Module):
         return "ok"
 
 
+@register_module("flush")
 class FlushModule(Module):
     """L3: chunked, rate-limited flush to an external persistent tier
     (parallel file system / DAOS stand-in).  Chunking bounds the
@@ -199,6 +216,7 @@ class FlushModule(Module):
 
     name = "l3-flush"
     priority = 40
+    level = "L3"
 
     def __init__(self, chunk_bytes: int = 4 << 20):
         self.chunk_bytes = chunk_bytes
@@ -230,6 +248,7 @@ class FlushModule(Module):
         return "ok"
 
 
+@register_module("verify")
 class VerifyModule(Module):
     """Post-write integrity check (reads back from the L1 tier)."""
 

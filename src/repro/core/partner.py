@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import runtime
 from repro.kernels.xor_parity import xor_pair_pallas
 
 
@@ -102,8 +103,8 @@ def encode_l2(state, pspecs, mesh, *, mode: str = "xor", axis: str = "data",
         init = jax.lax.dynamic_index_in_dim(xs, (g - 1) % G, keepdims=False)
         return jax.lax.fori_loop(0, G - 1, step, init)
 
-    fn = jax.shard_map(inner, mesh=mesh, in_specs=(pspecs,),
-                       out_specs=P(all_axes), check_vma=False)
+    fn = runtime.shard_map(inner, mesh=mesh, in_specs=(pspecs,),
+                           out_specs=P(all_axes), check_vma=False)
     return fn(state)
 
 

@@ -1,0 +1,160 @@
+"""v2 declarative pipeline surface: ModuleRegistry + PipelineSpec.
+
+The paper's "flexibility through modular design" means the set of resilience
+modules is *open*: compression, integrity, erasure and format-conversion
+strategies slot into the pipeline by priority without editing the engine or
+the client.  The seed hardwired the pipeline in ``VelocClient.__init__``;
+here the pipeline is data:
+
+    @register_module("mirror")
+    class MirrorModule(Module):
+        priority = 35
+        def process(self, ctx): ...
+
+    spec = PipelineSpec(name="run", mode="async", modules=[
+        ModuleSpec("serialize", {"encoding": "zlib"}),
+        ModuleSpec("local"),
+        ModuleSpec("mirror"),
+        ModuleSpec("flush"),
+    ])
+    engine = spec.compile(backend=backend)
+
+``VelocConfig`` (the legacy closed-set config) compiles down to a
+``PipelineSpec`` via ``VelocConfig.to_pipeline_spec()`` — same modules, same
+priorities, byte-identical on-disk output.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class ModuleRegistry:
+    """Open name -> module-factory registry.
+
+    A factory is any callable returning a ``Module`` when called with the
+    spec's option dict as keyword arguments — usually the module class
+    itself.
+    """
+
+    def __init__(self):
+        self._factories: dict[str, Callable] = {}
+
+    def register(self, name: str, factory: Optional[Callable] = None, *,
+                 override: bool = False):
+        """Register ``factory`` under ``name``; usable as a decorator."""
+
+        def do_register(f):
+            if not override and name in self._factories:
+                raise ValueError(
+                    f"module {name!r} already registered "
+                    f"(pass override=True to replace)")
+            self._factories[name] = f
+            return f
+
+        if factory is not None:
+            return do_register(factory)
+        return do_register
+
+    def get(self, name: str) -> Callable:
+        try:
+            return self._factories[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown module {name!r}; registered: {sorted(self._factories)}"
+            ) from None
+
+    def create(self, name: str, **options):
+        return self.get(name)(**options)
+
+    def names(self) -> list[str]:
+        return sorted(self._factories)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._factories
+
+
+#: The default registry; built-in modules register here on import of
+#: ``repro.core.modules``.
+MODULES = ModuleRegistry()
+
+
+def register_module(name: str, factory: Optional[Callable] = None, *,
+                    registry: Optional[ModuleRegistry] = None,
+                    override: bool = False):
+    """``@register_module("xor")`` — add a module factory to the default
+    registry (or ``registry`` when given)."""
+    return (registry or MODULES).register(name, factory, override=override)
+
+
+@dataclass
+class ModuleSpec:
+    """One pipeline stage: a registered module name + its options.
+
+    ``priority`` overrides the module class's default priority so custom
+    modules (and reorderings) slot in declaratively.
+    """
+
+    name: str
+    options: dict = field(default_factory=dict)
+    priority: Optional[int] = None
+
+
+def _default_modules() -> list[ModuleSpec]:
+    return [ModuleSpec("serialize"), ModuleSpec("local"), ModuleSpec("flush")]
+
+
+@dataclass
+class PipelineSpec:
+    """Declarative checkpoint pipeline; ``compile()`` produces an ``Engine``.
+
+    mode          "async" (active backend drains everything past
+                  ``blocking_cut``) or "sync" (whole pipeline inline).
+    modules       ordered only by each module's priority — list order is
+                  irrelevant, matching the engine's contract.
+    blocking_cut  highest priority that still runs inline in async mode
+                  (VELOC semantics: block only until the fastest level holds
+                  the checkpoint).
+    """
+
+    name: str = "ckpt"
+    mode: str = "async"                     # async | sync
+    modules: list[ModuleSpec] = field(default_factory=_default_modules)
+    blocking_cut: int = 5
+    backend_workers: int = 2
+    phase_predictor: str = "none"           # none | ema | gru
+    keep_versions: int = 3                  # GC horizon (0 disables GC)
+
+    def module_options(self, name: str) -> Optional[dict]:
+        """Options of the first spec entry named ``name`` (None if absent)."""
+        for ms in self.modules:
+            if ms.name == name:
+                return ms.options
+        return None
+
+    def erasure_group_size(self) -> int:
+        """The XOR/RS group width this pipeline encodes with (0 when no
+        erasure module is configured).  Mirrors XorGroupModule's default so
+        a bare ModuleSpec("xor") resolves consistently."""
+        opts = self.module_options("xor")
+        if opts is None:
+            return 0
+        return opts.get("group_size", 4)
+
+    def build_modules(self) -> list:
+        import repro.core.modules  # noqa: F401 — registers the built-ins
+        out = []
+        for ms in self.modules:
+            mod = MODULES.create(ms.name, **ms.options)
+            if ms.priority is not None:
+                mod.priority = ms.priority
+            out.append(mod)
+        return out
+
+    def compile(self, backend=None):
+        """Build the Engine.  ``backend`` is the ActiveBackend for async
+        mode (None runs the full pipeline inline)."""
+        from repro.core.engine import Engine
+
+        return Engine(self.build_modules(), backend,
+                      blocking_cut=self.blocking_cut)

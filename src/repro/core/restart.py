@@ -60,7 +60,7 @@ def fetch_shard_any_level(cluster, name: str, version: int, rank: int,
         return blob
     # L2b parity reconstruct
     m = _manifest_for(cluster, name, version)
-    g = (m or {}).get("group_size", 0) or getattr(cluster.cfg, "xor_group", 0)
+    g = (m or {}).get("group_size", 0) or getattr(cluster, "group_size", 0)
     g = min(g, cluster.nranks)
     if g >= 2:
         gid, gidx = erasure.group_of(rank, g)

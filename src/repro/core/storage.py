@@ -13,14 +13,19 @@ Tiers carry nominal bandwidth/persistency metadata used by the tier
 *scheduler* (pick_tier) — faithful to the paper's observation that the
 fastest tier is not always optimal under producer-consumer concurrency
 [IPDPS'19]: a tier busy draining to the next level is deprioritized.
+
+The v2 surface makes the tier stack *declarative*: ``TierSpec`` names a
+registered tier kind + its options, ``TierTopology`` lists the node-local
+and external specs, and ``Cluster`` builds its fabric from the topology.
+New tier kinds (burst buffer, object store, ...) plug in via
+``@register_tier("kind")`` without touching the cluster or the modules.
 """
 from __future__ import annotations
 
 import os
 import threading
-import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 
 @dataclass
@@ -188,6 +193,139 @@ class KVTier(StorageTier):
 
     def keys(self, prefix=""):
         return [k for k in self._store if k.startswith(prefix)]
+
+
+# ---------------------------------------------------------------------------
+# declarative tier specs (v2 API)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TierSpec:
+    """One tier in a topology: a registered kind + placement metadata.
+
+    ``name`` (and path-like options) may contain ``{rank}``, substituted
+    when the tier is instantiated for a node ("dram{rank}" -> "dram0").
+    ``options`` carries kind-specific settings (e.g. ``subdir`` for file
+    tiers, ``journal`` for kv tiers), resolved by the kind's builder.
+    """
+
+    kind: str
+    name: str = ""
+    gbps: float = 1.0
+    persistent: bool = True
+    node_local: bool = False
+    options: dict = field(default_factory=dict)
+
+    def resolved_name(self, rank: Optional[int] = None) -> str:
+        return (self.name or self.kind).format(
+            rank="" if rank is None else rank)
+
+
+class TierRegistry:
+    """Open kind -> tier-builder registry.  A builder is called as
+    ``builder(spec, scratch=..., rank=...)`` and returns a StorageTier."""
+
+    def __init__(self):
+        self._builders: dict[str, Callable] = {}
+
+    def register(self, kind: str, builder: Optional[Callable] = None, *,
+                 override: bool = False):
+        def do_register(b):
+            if not override and kind in self._builders:
+                raise ValueError(
+                    f"tier kind {kind!r} already registered "
+                    f"(pass override=True to replace)")
+            self._builders[kind] = b
+            return b
+
+        if builder is not None:
+            return do_register(builder)
+        return do_register
+
+    def create(self, spec: TierSpec, *, scratch: str,
+               rank: Optional[int] = None) -> StorageTier:
+        try:
+            builder = self._builders[spec.kind]
+        except KeyError:
+            raise KeyError(
+                f"unknown tier kind {spec.kind!r}; registered: "
+                f"{sorted(self._builders)}") from None
+        return builder(spec, scratch=scratch, rank=rank)
+
+    def kinds(self) -> list[str]:
+        return sorted(self._builders)
+
+    def __contains__(self, kind: str) -> bool:
+        return kind in self._builders
+
+
+#: Default registry with the built-in kinds below.
+TIERS = TierRegistry()
+
+
+def register_tier(kind: str, builder: Optional[Callable] = None, *,
+                  registry: Optional[TierRegistry] = None,
+                  override: bool = False):
+    """``@register_tier("bb")`` — add a tier builder to the default
+    registry (or ``registry`` when given)."""
+    return (registry or TIERS).register(kind, builder, override=override)
+
+
+@register_tier("dram")
+def _build_dram(spec: TierSpec, *, scratch: str, rank: Optional[int] = None):
+    return DRAMTier(name=spec.resolved_name(rank), gbps=spec.gbps)
+
+
+@register_tier("file")
+def _build_file(spec: TierSpec, *, scratch: str, rank: Optional[int] = None):
+    sub = spec.options.get("subdir", spec.name or "file")
+    sub = sub.format(rank="" if rank is None else rank)
+    return FileTier(os.path.join(scratch, sub), name=spec.resolved_name(rank),
+                    gbps=spec.gbps, persistent=spec.persistent,
+                    node_local=spec.node_local)
+
+
+@register_tier("kv")
+def _build_kv(spec: TierSpec, *, scratch: str, rank: Optional[int] = None):
+    journal = spec.options.get("journal")
+    if journal:
+        journal = os.path.join(
+            scratch, journal.format(rank="" if rank is None else rank))
+    return KVTier(name=spec.resolved_name(rank), gbps=spec.gbps,
+                  journal=journal)
+
+
+def default_node_specs() -> list[TierSpec]:
+    return [
+        TierSpec("dram", name="dram{rank}", gbps=100.0, persistent=False,
+                 node_local=True),
+        TierSpec("file", name="ssd{rank}", gbps=3.0, persistent=True,
+                 node_local=True, options={"subdir": "node{rank}"}),
+    ]
+
+
+def default_external_specs() -> list[TierSpec]:
+    return [TierSpec("file", name="pfs", gbps=1.0, persistent=True,
+                     node_local=False, options={"subdir": "pfs"})]
+
+
+@dataclass
+class TierTopology:
+    """Declarative cluster storage layout: per-node tier stack + shared
+    external tiers, both lists of TierSpec.  Defaults reproduce the classic
+    DRAM + node-local SSD + shared-PFS layout."""
+
+    scratch: str = "/tmp/veloc"
+    node: list[TierSpec] = field(default_factory=default_node_specs)
+    external: list[TierSpec] = field(default_factory=default_external_specs)
+
+    def build_node(self, rank: int) -> list[StorageTier]:
+        return [TIERS.create(s, scratch=self.scratch, rank=rank)
+                for s in self.node]
+
+    def build_external(self) -> list[StorageTier]:
+        return [TIERS.create(s, scratch=self.scratch) for s in self.external]
 
 
 def pick_tier(tiers: list[StorageTier], *, need_persistent=False,

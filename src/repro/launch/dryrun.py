@@ -117,6 +117,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, variant: str = "base"):
         t_compile = time.time() - t0
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     costs = hloa.analyze_text(compiled.as_text(), n_dev)
     mf = model_flops(cfg, shape)

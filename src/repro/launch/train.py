@@ -22,7 +22,8 @@ import numpy as np
 
 from repro import runtime
 from repro.configs.base import ShapeCfg, get_config, smoke_config
-from repro.core import DataStates, VelocClient, VelocConfig
+from repro.core import (Cluster, DataStates, ModuleSpec, PipelineSpec,
+                        TierTopology, VelocClient)
 from repro.train.data import SyntheticStream
 from repro.train.steps import init_train_state, make_train_step
 
@@ -60,14 +61,20 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     stream = SyntheticStream(cfg, shape, seed=1234)
 
-    vcfg = VelocConfig(
-        name=f"train-{args.arch}", scratch=args.scratch,
+    # single-host run, one rank: local write + external flush, no partner/XOR
+    pipeline = PipelineSpec(
+        name=f"train-{args.arch}",
         mode="sync" if args.mode == "sync" else "async",
-        encoding=args.encoding, interval_s=args.interval_s,
+        modules=[ModuleSpec("interval", {"interval_s": args.interval_s}),
+                 ModuleSpec("serialize", {"encoding": args.encoding}),
+                 ModuleSpec("local"),
+                 ModuleSpec("flush")],
         phase_predictor=args.phase_predictor,
-        partner=False, xor_group=0,  # single-host run: one rank
     )
-    client = VelocClient(vcfg) if args.mode != "off" else None
+    client = None
+    if args.mode != "off":
+        client = VelocClient(pipeline,
+                             Cluster(TierTopology(scratch=args.scratch)))
     ds = DataStates(client.cluster) if client else None
 
     state = init_train_state(key, cfg)
@@ -79,6 +86,9 @@ def main(argv=None):
             print(f"[veloc] resumed from checkpoint v{v}")
         else:
             print("[veloc] no checkpoint found; cold start")
+            for d in client.restart_diagnostics:
+                print(f"[veloc]   v{d['version']} ({d['level']}) skipped: "
+                      f"{d['error']}")
 
     capture = args.capture == "fused" and args.mode != "off"
     step_fn = jax.jit(make_train_step(cfg, lr=args.lr, capture=capture),
@@ -100,13 +110,13 @@ def main(argv=None):
         loss = float(metrics["loss"])
         losses.append(loss)
         if client and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-            ctx = client.checkpoint(state, version=step + 1, snap=snap,
+            fut = client.checkpoint(state, version=step + 1, snap=snap,
                                     meta={"step": step + 1, "loss": loss})
-            if ds and not ctx.skipped:
+            if ds and not fut.skipped:
                 ds.record(step + 1, metrics={"loss": loss})
             print(f"step {step+1}: loss={loss:.4f} "
-                  f"ckpt_blocking={ctx.results.get('app_blocking_s', 0)*1e3:.1f}ms"
-                  f"{' (skipped)' if ctx.skipped else ''}")
+                  f"ckpt_blocking={fut.results.get('app_blocking_s', 0)*1e3:.1f}ms"
+                  f"{' (skipped)' if fut.skipped else ''}")
         elif (step + 1) % 10 == 0:
             print(f"step {step+1}: loss={loss:.4f}")
 

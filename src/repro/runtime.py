@@ -30,6 +30,39 @@ def use_mesh(mesh: Optional[jax.sharding.Mesh]):
         _state.mesh = prev
 
 
+@jax.custom_vjp
+def opt_barrier(x):
+    """Differentiable ``optimization_barrier``: older jax releases have no
+    AD rule for the primitive; its transpose is the barrier itself, so a
+    custom_vjp reproduces the native rule everywhere."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-compat shard_map: ``jax.shard_map`` on newer jax, the
+    experimental one (with its ``check_rep`` spelling of check_vma) on
+    older releases."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+
+    return legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=check_vma)
+
+
 def data_axes(mesh: Optional[jax.sharding.Mesh] = None) -> tuple[str, ...]:
     """The batch/FSDP axes present in the mesh ('pod' first when multi-pod)."""
     mesh = mesh or get_mesh()

@@ -27,8 +27,8 @@ def test_ring_xor_and_partner_encode():
     from jax.sharding import PartitionSpec as P, NamedSharding
     from repro.core.partner import (encode_l2, ring_xor_parity_ref,
                                     xor_reconstruct_group, flatten_local_u32)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(data=4, model=2)
     state = {"a": jnp.arange(4*6*512, dtype=jnp.float32).reshape(24, 512),
              "b": jnp.ones((2, 256), jnp.bfloat16)}
     pspecs = {"a": P("data", None), "b": P(None, "model")}
