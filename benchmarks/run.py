@@ -15,9 +15,18 @@ scale with the scaling factor stated in the ``derived`` column.
   bench_interval  ML interval predictor vs Young/Daly vs exhaustive
                   simulation (ref [1]: NN beats non-NN baselines).
   bench_engine    pipeline module throughput (serialize/checksum/compress).
+  bench_delta     incremental (differential) checkpointing: bytes written
+                  per checkpoint and blocking time, full vs delta shards on
+                  a 1%-dirty workload (write amplification).
   bench_scale     modeled weak-scaling of the L3 flush under shared-PFS
                   bandwidth (flush contention), from the storage model.
+
+``--json FILE`` additionally writes the rows as JSON (the perf-trajectory
+artifact CI archives); ``--only SUBSTR[,SUBSTR...]`` filters which
+benchmarks run (e.g. ``--only delta`` for the CI smoke job).
 """
+import argparse
+import json
 import os
 import shutil
 import sys
@@ -229,6 +238,46 @@ def bench_engine():
     row("checksum_16MB", us, f"{16 / (us / 1e6) / 1024:.2f}GBps")
 
 
+def bench_delta():
+    """Write amplification and blocking time: full re-serialization vs
+    delta shards when ~1% of the state changes per step."""
+    from repro.core import VelocClient, VelocConfig
+
+    n = (8 << 20) // 4  # 8 MB of f32 state
+    rng = np.random.default_rng(0)
+    w0 = rng.standard_normal(n).astype(np.float32)
+    dirty = max(1, n // 100)
+
+    def run(delta):
+        root = f"/tmp/veloc_bench_delta_{int(delta)}"
+        shutil.rmtree(root, ignore_errors=True)
+        client = VelocClient(VelocConfig(
+            scratch=root, mode="sync", delta=delta, partner=False,
+            xor_group=0, flush=True, keep_versions=10))
+        w = w0
+        client.checkpoint({"w": w}, version=1, device_snapshot=False)
+        written, blocking = [], []
+        for v in range(2, 8):
+            w = w.copy()
+            lo = (v * 131331) % (n - dirty)
+            w[lo:lo + dirty] += 1.0
+            t0 = time.perf_counter()
+            fut = client.checkpoint({"w": w}, version=v,
+                                    device_snapshot=False)
+            blocking.append(time.perf_counter() - t0)
+            written.append(fut.results["shard_bytes"])
+        client.shutdown()
+        return float(np.mean(written)), float(np.mean(blocking))
+
+    full_b, full_t = run(False)
+    delta_b, delta_t = run(True)
+    row("delta_off_per_ckpt_8MB_1pct", full_t * 1e6,
+        f"{full_b / 1e6:.2f}MBwritten,blocking={full_t * 1e3:.1f}ms")
+    row("delta_on_per_ckpt_8MB_1pct", delta_t * 1e6,
+        f"{delta_b / 1e6:.2f}MBwritten,write_amp={full_b / delta_b:.1f}x,"
+        f"blocking={delta_t * 1e3:.1f}ms")
+
+
 def bench_scale():
     """Weak-scaling model of the L3 flush: N nodes share the PFS; per-node
     flush time grows linearly while L1+L2 stay flat — the paper's core
@@ -246,12 +295,36 @@ def bench_scale():
             f"async_hides={t_l3 / max(t_l1, 1e-9):.0f}x")
 
 
-def main() -> None:
+ALL_BENCHES = (bench_levels, bench_engine, bench_erasure, bench_capture,
+               bench_async, bench_delta, bench_interval, bench_scale)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="FILE",
+                    help="also write the rows as a JSON list "
+                         "(perf-trajectory artifact)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated name substrings; run only "
+                         "matching benchmarks (e.g. 'delta,engine')")
+    args = ap.parse_args(argv)
+    benches = ALL_BENCHES
+    if args.only:
+        pats = [s.strip() for s in args.only.split(",") if s.strip()]
+        benches = [f for f in ALL_BENCHES
+                   if any(p in f.__name__ for p in pats)]
+        if not benches:
+            ap.error(f"--only {args.only!r} matches no benchmark "
+                     f"({', '.join(f.__name__ for f in ALL_BENCHES)})")
     t0 = time.time()
     print("name,us_per_call,derived")
-    for fn in (bench_levels, bench_engine, bench_erasure, bench_capture,
-               bench_async, bench_interval, bench_scale):
+    for fn in benches:
         fn()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": us, "derived": d}
+                       for n, us, d in ROWS], f, indent=2)
+        print(f"# wrote {len(ROWS)} rows to {args.json}", file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -58,6 +58,9 @@ class VelocConfig:
     interval_s: Optional[float] = None  # defensive-checkpoint interval
     encoding: str = "raw"               # raw | q8 | zlib  (compression module)
     checksums: bool = True
+    delta: bool = False                 # incremental (differential) shards
+    delta_chunk_bytes: int = 64 * 1024  # dirty-detection granularity
+    delta_max_chain: int = 8            # deltas before a forced full shard
     partner: bool = True
     partner_distance: int = 1
     xor_group: int = 4                  # 0 disables the XOR module
@@ -77,6 +80,17 @@ class VelocConfig:
                 ModuleSpec("serialize", {"encoding": self.encoding,
                                          "checksums": self.checksums}),
                 ModuleSpec("local")]
+        if self.delta:
+            if self.encoding == "q8":
+                # a lossy base can never satisfy a delta overlay's digest:
+                # untouched chunks decode differently from what was hashed,
+                # so every chain restore would fail and fall back.
+                raise ValueError(
+                    "delta=True requires a lossless encoding "
+                    "(raw or zlib), not 'q8'")
+            mods.insert(1, ModuleSpec("delta", {
+                "chunk_bytes": self.delta_chunk_bytes,
+                "max_chain": self.delta_max_chain}))
         if self.partner:
             mods.append(ModuleSpec("partner",
                                    {"distance": self.partner_distance}))
@@ -141,15 +155,32 @@ class Cluster:
         # registry[(name, version, level)] = {rank: digest}
         self._registry: dict[tuple, dict[int, str]] = {}
         self._meta: dict[tuple, dict] = {}
+        # (name, version) -> parent version of a delta shard (None = full);
+        # GC refcounts through these links so a base is never dropped while
+        # a live delta chain still references it.
+        self._parents: dict[tuple, Optional[int]] = {}
+        # (name, version) -> ranks that folded their shard full (compact());
+        # the parent link is only cleared once EVERY rank has — earlier,
+        # other ranks' delta shards still need the chain.
+        self._compacted: dict[tuple, set] = {}
 
     # ------------------------------------------------------------------
     def node_tiers(self, rank: int) -> list[StorageTier]:
         return self._node_tiers[rank]
 
+    @staticmethod
+    def _tier_get(tier: StorageTier, key: str) -> Optional[bytes]:
+        """A tier that *raises* (flaky hardware, injected fault) reads as a
+        miss — restart keeps probing cheaper-to-costlier sources."""
+        try:
+            return tier.get(key)
+        except Exception:  # noqa: BLE001
+            return None
+
     def fetch_shard(self, name: str, version: int, rank: int) -> Optional[bytes]:
         key = fmt.shard_key(name, version, rank)
         for tier in self._node_tiers[rank] + self.external_tiers:
-            blob = tier.get(key)
+            blob = self._tier_get(tier, key)
             if blob is not None:
                 return blob
         return None
@@ -161,7 +192,7 @@ class Cluster:
         holder = partner_of(rank, self.nranks, distance)
         key = fmt.shard_key(name, version, rank) + ".partner"
         for tier in self._node_tiers[holder]:
-            blob = tier.get(key)
+            blob = self._tier_get(tier, key)
             if blob is not None:
                 return blob
         return None
@@ -175,7 +206,7 @@ class Cluster:
         tiers = (self._node_tiers[home] if 0 <= home < self.nranks else []) \
             + self.external_tiers
         for tier in tiers:
-            blob = tier.get(key)
+            blob = self._tier_get(tier, key)
             if blob is not None:
                 return blob
         return None
@@ -188,14 +219,69 @@ class Cluster:
             reg[rank] = digest
             if meta:
                 self._meta[(name, version)] = dict(meta)
+                dmeta = meta.get("delta") or {}
+                self._parents[(name, version)] = dmeta.get("parent") \
+                    if dmeta.get("kind") == "delta" else None
             if len(reg) == self.nranks:
                 blob = fmt.make_manifest(
                     name, version, self.nranks, level=level,
                     shard_digests=reg, meta=self._meta.get((name, version), {}),
+                    parent=self._parents.get((name, version)),
                     group_size=self.group_size)
                 key = fmt.manifest_key(name, version) + f".{level}"
                 for tier in self.external_tiers:
                     tier.put(key, blob)
+
+    def republish_manifest(self, name, version, rank, digest, meta=None):
+        """Post-compaction commit for one rank: replace its digest and
+        republish complete manifests.  The version-wide parent link (and
+        the manifest meta saying "full") only flips once every rank has
+        compacted — until then other ranks' delta shards still walk the
+        chain, and GC must keep it alive."""
+        with self._lock:
+            # a fresh process (restart-then-compact) has an empty in-memory
+            # registry: hydrate this version's digests/parent from the
+            # on-disk manifests, else nothing would be republished and the
+            # rewritten shard bytes would fail every stale-digest check.
+            if not any(n == name and v == version
+                       for (n, v, _l) in self._registry):
+                for m in self.manifests(name):
+                    if m["version"] != version:
+                        continue
+                    self._registry[(name, version, m["level"])] = \
+                        dict(m["shard_digests"])
+                    self._parents.setdefault((name, version), m.get("parent"))
+                    self._meta.setdefault((name, version),
+                                          m.get("meta") or {})
+            done = self._compacted.setdefault((name, version), set())
+            done.add(rank)
+            fully_compacted = len(done) == self.nranks
+            if fully_compacted:
+                self._parents[(name, version)] = None
+                if meta is not None:
+                    self._meta[(name, version)] = dict(meta)
+            parent = self._parents.get((name, version))
+            for (n, v, level), reg in self._registry.items():
+                if n != name or v != version:
+                    continue
+                reg[rank] = digest
+                if len(reg) == self.nranks:
+                    blob = fmt.make_manifest(
+                        name, version, self.nranks, level=level,
+                        shard_digests=reg,
+                        meta=self._meta.get((name, version), {}),
+                        parent=parent, group_size=self.group_size)
+                    key = fmt.manifest_key(name, version) + f".{level}"
+                    for tier in self.external_tiers:
+                        tier.put(key, blob)
+
+    def has_shard_record(self, name: str, version: int, rank: int) -> bool:
+        """Did ``rank`` persist ``version`` at ANY level?  (Used by the
+        delta module: a parent that never hit storage must not anchor a
+        chain.)"""
+        with self._lock:
+            return any(rank in reg for (n, v, _l), reg in
+                       self._registry.items() if n == name and v == version)
 
     def manifests(self, name: str) -> list[dict]:
         out = {}
@@ -217,11 +303,23 @@ class Cluster:
     def gc(self, name: str, keep: int):
         """Drop every artifact of versions beyond the ``keep`` newest:
         shards, partner copies, parity blobs and per-level manifests, on
-        node-local AND external tiers (prefix delete per version)."""
+        node-local AND external tiers (prefix delete per version).
+
+        Delta-aware: versions the survivors transitively reference through
+        ``parent`` links (their delta chains down to the full base) are
+        refcounted live and kept, whatever their age — dropping a base
+        would strand every delta above it."""
         with self._lock:
             versions = sorted({v for (n, v, _l) in self._registry if n == name},
                               reverse=True)
-            drop = versions[keep:]
+            live = set(versions[:keep])
+            frontier = list(live)
+            while frontier:
+                p = self._parents.get((name, frontier.pop()))
+                if p is not None and p not in live:
+                    live.add(p)
+                    frontier.append(p)
+            drop = [v for v in versions if v not in live]
             for v in drop:
                 prefix = fmt.version_prefix(name, v)
                 for tiers in self._node_tiers:
@@ -234,6 +332,8 @@ class Cluster:
                 for k in [k for k in self._registry if k[0] == name and k[1] == v]:
                     self._registry.pop(k, None)
                 self._meta.pop((name, v), None)
+                self._parents.pop((name, v), None)
+                self._compacted.pop((name, v), None)
 
 
 class VelocClient:
@@ -395,6 +495,80 @@ class VelocClient:
                     "error": f"{type(e).__name__}: {e}"})
                 continue
         return None, None
+
+    def compact(self, version: Optional[int] = None) -> int:
+        """Fold a delta chain back into a full shard (bounding restart
+        latency and freeing chain ancestors for GC).
+
+        Resolves this rank's regions of ``version`` (latest restorable when
+        None) through the parent chain, rewrites the shard as a full
+        encoding in every tier that holds it (primary and partner copies),
+        republishes the manifests with the parent link cleared, and resets
+        the pipeline's delta tracker so the next delta chains off the
+        compacted base.  Returns the compacted version."""
+        from repro.core import restart
+
+        name = self.name
+        if version is None:
+            found = restart.find_restart(self.cluster, name)
+            if not found:
+                raise IOError(f"no restorable version of {name!r} to compact")
+            version = found[0]["version"]
+        blob = restart.fetch_shard_any_level(
+            self.cluster, name, version, self.rank,
+            distance=self._partner_distance)
+        if blob is None:
+            raise IOError(f"rank {self.rank} shard unrecoverable for "
+                          f"v{version}")
+        reader = fmt.ShardReader(blob)
+        if not reader.delta_regions():
+            return version  # already full
+        resolved = restart.load_rank_regions(
+            self.cluster, name, version, self.rank,
+            distance=self._partner_distance)
+        regions = []
+        for n in reader.region_names:
+            e = reader.entry(n)
+            regions.append(fmt.Region(
+                n, resolved[n], global_shape=tuple(e["global_shape"]),
+                shard_axis=e["shard_axis"], shard_index=e["shard_index"],
+                shard_count=e["shard_count"]))
+        meta = dict(reader.meta)
+        meta["delta"] = {"kind": "full", "compacted": True}
+        ser_opts = self.spec.module_options("serialize") or {}
+        shard = fmt.serialize_shard(
+            regions, meta, encoding=ser_opts.get("encoding", "raw"),
+            checksums=ser_opts.get("checksums", True))
+        from repro.kernels import ops as kops
+
+        digest = kops.digest(shard)
+        key = fmt.shard_key(name, version, self.rank)
+        wrote = False
+        for tier in (self.cluster.node_tiers(self.rank)
+                     + self.cluster.external_tiers):
+            if tier.exists(key):
+                tier.put(key, shard)
+                wrote = True
+        if self.cluster.nranks >= 2:
+            from repro.core.erasure import partner_of
+
+            holder = partner_of(self.rank, self.cluster.nranks,
+                                self._partner_distance)
+            pk = key + ".partner"
+            for tier in self.cluster.node_tiers(holder):
+                if tier.exists(pk):
+                    tier.put(pk, shard)
+        if not wrote:  # primary copy was lost everywhere: re-seed L1
+            from repro.core.storage import pick_tier
+
+            pick_tier(self.cluster.node_tiers(self.rank)).put(key, shard)
+        self.cluster.republish_manifest(name, version, self.rank, digest,
+                                        meta=meta)
+        try:
+            self.engine.module("delta").reset_chain(name, self.rank, version)
+        except KeyError:
+            pass
+        return version
 
     def shutdown(self):
         if self.backend is not None:

@@ -18,7 +18,7 @@ import time
 from typing import Optional
 
 from repro.core.backend import ActiveBackend
-from repro.core.future import CheckpointFuture
+from repro.core.future import CheckpointError, CheckpointFuture
 from repro.core.modules import CheckpointContext, Module
 
 
@@ -56,8 +56,30 @@ class Engine:
             elif status == "ok" and future is not None and m.level:
                 future._level_done(m.level)
 
+    def _nothing_persisted(self, ctx: CheckpointContext
+                           ) -> Optional[CheckpointError]:
+        """After the pipeline drains: if every level-tagged module that ran
+        reported an error (graceful per-tier degradation) and NONE
+        succeeded, the checkpoint exists nowhere — the future must not read
+        as success."""
+        if not ctx.results.get("errors"):
+            return None
+        level_ok = level_err = False
+        for m in self.modules:
+            if not m.level:
+                continue
+            status = ctx.results.get(f"{m.name}.status")
+            level_ok = level_ok or status == "ok"
+            level_err = level_err or status == "error"
+        if level_err and not level_ok:
+            return CheckpointError(
+                f"checkpoint {ctx.name} v{ctx.version}: every resilience "
+                f"level failed ({ctx.results['errors']}); nothing persisted")
+        return None
+
     def submit(self, ctx: CheckpointContext,
                future: Optional[CheckpointFuture] = None) -> CheckpointContext:
+        ctx.engine = self
         front = [m for m in self.modules if m.priority <= self.blocking_cut]
         rest = [m for m in self.modules if m.priority > self.blocking_cut]
         try:
@@ -79,7 +101,7 @@ class Engine:
                     future._finish(e)
                 raise
             if future is not None:
-                future._finish()
+                future._finish(self._nothing_persisted(ctx))
         else:
             def run_rest():
                 try:
@@ -90,7 +112,7 @@ class Engine:
                     raise  # the backend records it too (backend.errors())
                 else:
                     if future is not None:
-                        future._finish()
+                        future._finish(self._nothing_persisted(ctx))
 
             on_drop = None
             if future is not None:

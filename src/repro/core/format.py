@@ -34,6 +34,9 @@ class Region:
     shard_axis: int = -1  # axis this rank's piece slices (-1 = replicated)
     shard_index: int = 0
     shard_count: int = 1
+    #: set by the delta pipeline module: serialize only the dirty chunks of
+    #: this region (a repro.core.delta.DeltaPatch) instead of its bytes.
+    patch: Any = None
 
 
 def serialize_shard(regions: list[Region], meta: dict, *, encoding: str = "raw",
@@ -52,7 +55,15 @@ def serialize_shard(regions: list[Region], meta: dict, *, encoding: str = "raw",
             "shard_count": r.shard_count,
             "encoding": encoding,
         }
-        if encoding == "q8" and arr.dtype.kind == "f" and arr.size >= 1024:
+        if r.patch is not None:
+            # differential region: only the dirty chunks travel; the reader
+            # needs the parent version's array to reconstruct (read(base=)).
+            from repro.core import delta as _delta
+
+            entry["encoding"] = "delta"
+            entry["base_version"] = r.patch.base_version
+            blob = _delta.encode_patch(r.patch)
+        elif encoding == "q8" and arr.dtype.kind == "f" and arr.size >= 1024:
             q, s, n, shape = kops.quantize(arr)
             blob = (np.int64(q.shape[0]).tobytes() + np.int64(q.shape[1]).tobytes()
                     + q.tobytes() + s.tobytes())
@@ -105,8 +116,37 @@ class ShardReader:
         blob = bytes(self._payload[e["offset"]:e["offset"] + e["nbytes"]])
         return kops.digest(blob) == e["digest"]
 
-    def read(self, name: str, *, verify: bool = True) -> np.ndarray:
+    def delta_regions(self) -> list[str]:
+        """Names of regions stored as deltas (need a base to reconstruct)."""
+        return [r["name"] for r in self.header["regions"]
+                if r["encoding"] == "delta"]
+
+    def read_patch(self, name: str, *, verify: bool = True):
+        """The DeltaPatch of a delta-encoded region (repro.core.delta)."""
+        from repro.core import delta as _delta
+
         e = self.entry(name)
+        if e["encoding"] != "delta":
+            raise ValueError(f"region {name!r} is {e['encoding']!r}, "
+                             f"not delta-encoded")
+        blob = bytes(self._payload[e["offset"]:e["offset"] + e["nbytes"]])
+        if verify and "digest" in e and kops.digest(blob) != e["digest"]:
+            raise IOError(f"checksum mismatch in region {name!r}")
+        return _delta.decode_patch(blob)
+
+    def read(self, name: str, *, verify: bool = True,
+             base: np.ndarray | None = None) -> np.ndarray:
+        e = self.entry(name)
+        if e["encoding"] == "delta":
+            from repro.core import delta as _delta
+
+            if base is None:
+                raise ValueError(
+                    f"region {name!r} is delta-encoded against "
+                    f"v{e.get('base_version')}; pass its base array "
+                    f"(restart walks the parent chain for you)")
+            return _delta.overlay(base, self.read_patch(name, verify=verify),
+                                  verify=verify)
         blob = bytes(self._payload[e["offset"]:e["offset"] + e["nbytes"]])
         if verify and "digest" in e and kops.digest(blob) != e["digest"]:
             raise IOError(f"checksum mismatch in region {name!r}")

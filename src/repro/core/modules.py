@@ -16,12 +16,14 @@ Modules that complete a resilience level carry a ``level`` tag ("L1"/"L2"/
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import numpy as np
 
+from repro.core import delta as dlt
 from repro.core import erasure, format as fmt
 from repro.core.pipeline import register_module
 from repro.core.storage import StorageTier, pick_tier
@@ -43,6 +45,8 @@ class CheckpointContext:
     results: dict = field(default_factory=dict)
     skipped: bool = False
     t_begin: float = field(default_factory=time.monotonic)
+    engine: Any = None  # set by Engine.submit; lets modules query pipeline
+    # state of OTHER versions of this stream (e.g. delta orphan check)
 
 
 class Module:
@@ -85,6 +89,114 @@ class IntervalModule(Module):
         return "ok"
 
 
+@register_module("delta")
+class DeltaModule(Module):
+    """Incremental checkpointing: fingerprint each region's chunks with the
+    Pallas block-hash kernel, diff against the last persisted version, and
+    attach a DeltaPatch so serialize emits only the dirty chunks.
+
+    Sits between "interval" and "serialize" (priority 8): past the async
+    blocking cut, so fingerprinting and diffing never block the app.  Emits
+    a *full* shard when there is no previous state, when the chain reaches
+    ``max_chain`` deltas (bounding restart latency), or when more than
+    ``max_dirty_ratio`` of the bytes changed (a delta would not pay for its
+    chunk table).  Chain metadata (parent / base version) travels in the
+    shard meta and the manifest so restart can walk the chain and GC can
+    refcount live bases."""
+
+    name = "delta"
+    priority = 8
+
+    def __init__(self, chunk_bytes: int = dlt.DEFAULT_CHUNK_BYTES,
+                 max_chain: int = 8, max_dirty_ratio: float = 0.5):
+        self.chunk_bytes = chunk_bytes
+        self.max_chain = max_chain
+        self.max_dirty_ratio = max_dirty_ratio
+        self._trackers: dict[tuple, dlt.DeltaTracker] = {}
+        self._locks: dict[tuple, threading.Lock] = {}
+        self._guard = threading.Lock()
+
+    def tracker(self, name: str, rank: int) -> dlt.DeltaTracker:
+        with self._guard:
+            return self._trackers.setdefault((name, rank), dlt.DeltaTracker())
+
+    def _lock(self, key: tuple) -> threading.Lock:
+        with self._guard:
+            return self._locks.setdefault(key, threading.Lock())
+
+    def reset_chain(self, name: str, rank: int, version: int):
+        """Compaction hook: version's chain was folded into a full shard."""
+        self.tracker(name, rank).note_compacted(version)
+
+    def process(self, ctx):
+        if callable(ctx.regions):
+            ctx.regions = ctx.regions()  # materialize D2H (we're off the
+            # app's critical path past the blocking cut)
+        t = self.tracker(ctx.name, ctx.rank)
+        # per-stream lock: backend workers may race two versions of the same
+        # rank; diffs and tracker updates must serialize per stream.
+        with self._lock((ctx.name, ctx.rank)):
+            stale = t.last_version is not None and ctx.version <= t.last_version
+            # self-healing: if the would-be parent never hit ANY tier (every
+            # write stage failed for it), chaining onto it would poison the
+            # next max_chain versions — emit a standalone full shard instead.
+            # Only judged once the parent's pipeline has settled: with >1
+            # backend worker its write stages may still be in flight, and a
+            # not-yet-recorded shard is not an orphan (a spurious full here
+            # would forfeit the delta win on every back-to-back checkpoint).
+            parent_settled = True
+            eng = getattr(ctx, "engine", None)
+            if eng is not None and eng.backend is not None and not t.empty:
+                parent_settled = eng.backend.status(
+                    f"pipe:{ctx.name}:{ctx.rank}", t.last_version) in (
+                    "done", "error", "superseded", "deadline-miss")
+            orphaned = (not t.empty and not stale and parent_settled
+                        and not ctx.cluster.has_shard_record(
+                            ctx.name, t.last_version, ctx.rank))
+            want_full = t.empty or stale or orphaned \
+                or t.chain_len >= self.max_chain
+            new_fps: dict[str, np.ndarray] = {}
+            patches: dict[str, dlt.DeltaPatch] = {}
+            dirty = total = 0
+            for r in ctx.regions:
+                arr = np.ascontiguousarray(r.array)
+                prev = None if want_full else t.fps.get(r.name)
+                if prev is None:
+                    new_fps[r.name] = dlt.fingerprints(arr, self.chunk_bytes)
+                    total += arr.nbytes
+                    dirty += arr.nbytes
+                    continue
+                patch, fp = dlt.make_patch(
+                    arr, prev, chunk_bytes=self.chunk_bytes,
+                    base_version=t.last_version)
+                new_fps[r.name] = fp
+                patches[r.name] = patch
+                total += patch.nbytes
+                dirty += len(patch.data)
+            ratio = dirty / total if total else 1.0
+            if want_full or ratio > self.max_dirty_ratio:
+                for r in ctx.regions:
+                    r.patch = None
+                ctx.meta["delta"] = {"kind": "full"}
+                t.note_full(ctx.version, new_fps)
+                ctx.results["delta_kind"] = "full"
+            else:
+                for r in ctx.regions:
+                    p = patches.get(r.name)
+                    # fully-dirty regions encode raw (no table overhead)
+                    r.patch = None if p is None or \
+                        len(p.indices) >= p.n_chunks else p
+                ctx.meta["delta"] = {
+                    "kind": "delta", "parent": t.last_version,
+                    "base": t.base_version, "chain_len": t.chain_len + 1}
+                t.note_delta(ctx.version, new_fps)
+                ctx.results["delta_kind"] = "delta"
+            ctx.results["delta_dirty_bytes"] = dirty
+            ctx.results["delta_total_bytes"] = total
+            ctx.results["delta_dirty_ratio"] = round(ratio, 4)
+        return "ok"
+
+
 @register_module("serialize")
 class SerializeModule(Module):
     """Regions -> shard bytes (repro.core.format), with the encoding chosen
@@ -122,7 +234,12 @@ class LocalWriteModule(Module):
     def process(self, ctx):
         tiers = ctx.cluster.node_tiers(ctx.rank)
         tier = pick_tier(tiers)
-        tier.put(fmt.shard_key(ctx.name, ctx.version, ctx.rank), ctx.shard)
+        try:
+            tier.put(fmt.shard_key(ctx.name, ctx.version, ctx.rank), ctx.shard)
+        except Exception as e:  # noqa: BLE001 — a dead local tier must not
+            # take the pipeline down; L2/L3 still run and restart falls back.
+            ctx.results["l1_error"] = f"{type(e).__name__}: {e}"
+            return "error"
         ctx.results["l1_tier"] = tier.info.name
         ctx.cluster.note_shard(ctx.name, ctx.version, "L1", ctx.rank, ctx.digest,
                                meta=ctx.meta)
@@ -145,9 +262,13 @@ class PartnerModule(Module):
         if ctx.nranks < 2:
             return "pass"
         partner = erasure.partner_of(ctx.rank, ctx.nranks, self.distance)
-        tier = pick_tier(ctx.cluster.node_tiers(partner))
-        tier.put(fmt.shard_key(ctx.name, ctx.version, ctx.rank) + ".partner",
-                 ctx.shard)
+        try:
+            tier = pick_tier(ctx.cluster.node_tiers(partner))
+            tier.put(fmt.shard_key(ctx.name, ctx.version, ctx.rank) + ".partner",
+                     ctx.shard)
+        except Exception as e:  # noqa: BLE001
+            ctx.results["l2_partner_error"] = f"{type(e).__name__}: {e}"
+            return "error"
         ctx.cluster.note_shard(ctx.name, ctx.version, "L2", ctx.rank, ctx.digest,
                                meta=ctx.meta)
         return "ok"
@@ -199,11 +320,16 @@ class XorGroupModule(Module):
         # cross-group placement: a node never stores the parity that protects
         # its own shard (erasure.parity_home); single group -> external tier.
         home = erasure.parity_home(gid, g, ctx.nranks)
-        if home < 0:
-            tier = pick_tier(ctx.cluster.external_tiers, need_persistent=True)
-        else:
-            tier = pick_tier(ctx.cluster.node_tiers(home))
-        tier.put(fmt.parity_key(ctx.name, ctx.version, gid), payload)
+        try:
+            if home < 0:
+                tier = pick_tier(ctx.cluster.external_tiers,
+                                 need_persistent=True)
+            else:
+                tier = pick_tier(ctx.cluster.node_tiers(home))
+            tier.put(fmt.parity_key(ctx.name, ctx.version, gid), payload)
+        except Exception as e:  # noqa: BLE001
+            ctx.results["l2_xor_error"] = f"{type(e).__name__}: {e}"
+            return "error"
         ctx.results["l2_group"] = gid
         return "ok"
 
@@ -228,20 +354,25 @@ class FlushModule(Module):
         limiter = ctx.cluster.rate_limiter
         gate = ctx.cluster.phase_gate
         n = len(ctx.shard)
-        if n <= self.chunk_bytes:
-            limiter.acquire(n)
-            tier.put(key, ctx.shard)
-        else:
-            # chunked put: vendor stores with multipart upload would stream;
-            # our tier API is whole-object, so chunks accumulate then publish
-            # (still rate-limited per chunk so interference stays bounded).
-            for off in range(0, n, self.chunk_bytes):
-                limiter.acquire(min(self.chunk_bytes, n - off))
-                if gate is not None:
-                    w = gate()
-                    if w > 0:
-                        time.sleep(min(w, 0.5))
-            tier.put(key, ctx.shard)
+        try:
+            if n <= self.chunk_bytes:
+                limiter.acquire(n)
+                tier.put(key, ctx.shard)
+            else:
+                # chunked put: vendor stores with multipart upload would
+                # stream; our tier API is whole-object, so chunks accumulate
+                # then publish (still rate-limited per chunk so interference
+                # stays bounded).
+                for off in range(0, n, self.chunk_bytes):
+                    limiter.acquire(min(self.chunk_bytes, n - off))
+                    if gate is not None:
+                        w = gate()
+                        if w > 0:
+                            time.sleep(min(w, 0.5))
+                tier.put(key, ctx.shard)
+        except Exception as e:  # noqa: BLE001
+            ctx.results["l3_error"] = f"{type(e).__name__}: {e}"
+            return "error"
         ctx.results["l3_tier"] = tier.info.name
         ctx.cluster.note_shard(ctx.name, ctx.version, "L3", ctx.rank, ctx.digest,
                                meta=ctx.meta)

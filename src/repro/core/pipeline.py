@@ -156,5 +156,15 @@ class PipelineSpec:
         mode (None runs the full pipeline inline)."""
         from repro.core.engine import Engine
 
+        if any(ms.name == "delta" for ms in self.modules):
+            enc = (self.module_options("serialize") or {}).get("encoding",
+                                                               "raw")
+            if enc == "q8":
+                # a lossy base can never satisfy a delta overlay's digests:
+                # untouched chunks decode differently from what was hashed,
+                # so every chain restore would fail and fall back.
+                raise ValueError(
+                    'the "delta" module requires a lossless serialize '
+                    'encoding (raw or zlib), not "q8"')
         return Engine(self.build_modules(), backend,
                       blocking_cut=self.blocking_cut)

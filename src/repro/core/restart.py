@@ -96,9 +96,22 @@ def fetch_shard_any_level(cluster, name: str, version: int, rank: int,
     return None
 
 
+#: Hard ceiling on delta-chain walks: defends against cyclic or corrupted
+#: parent links; real chains are bounded by DeltaModule's ``max_chain``.
+MAX_CHAIN_DEPTH = 64
+
+
 def load_rank_regions(cluster, name: str, version: int, rank: int,
-                      *, distance: int = 1) -> dict[str, np.ndarray]:
-    """{region_name: array} for one rank, verifying checksums."""
+                      *, distance: int = 1, _depth: int = 0
+                      ) -> dict[str, np.ndarray]:
+    """{region_name: array} for one rank, verifying checksums.
+
+    Differential shards are reconstructed by walking ``parent`` links down
+    to a full base (each hop fetched from the cheapest healthy level, like
+    any other shard), then overlaying each delta's dirty chunks on the way
+    back up — per-chunk digests and the full-array digest are verified at
+    every overlay, so a corrupt or missing link anywhere in the chain raises
+    and the caller falls back to an older version."""
     m = _manifest_for(cluster, name, version)
     digest = (m or {}).get("shard_digests", {}).get(rank)
     blob = fetch_shard_any_level(cluster, name, version, rank,
@@ -106,7 +119,57 @@ def load_rank_regions(cluster, name: str, version: int, rank: int,
     if blob is None:
         raise IOError(f"rank {rank} shard unrecoverable for v{version}")
     reader = fmt.ShardReader(blob)
-    return {n: reader.read(n) for n in reader.region_names}
+    delta_names = set(reader.delta_regions())
+    if not delta_names:
+        return {n: reader.read(n) for n in reader.region_names}
+    if _depth >= MAX_CHAIN_DEPTH:
+        raise IOError(f"delta chain exceeds {MAX_CHAIN_DEPTH} links at "
+                      f"v{version} (cyclic or corrupt parent metadata)")
+    parent = (reader.meta.get("delta") or {}).get("parent")
+    if parent is None:
+        parent = (m or {}).get("parent")
+    if parent is None:
+        raise IOError(f"delta shard v{version} has no parent link")
+    base = load_rank_regions(cluster, name, int(parent), rank,
+                             distance=distance, _depth=_depth + 1)
+    out = {}
+    for n in reader.region_names:
+        if n in delta_names:
+            if n not in base:
+                raise IOError(f"delta region {n!r} of v{version} missing "
+                              f"from parent v{parent}")
+            out[n] = reader.read(n, base=base[n])
+        else:
+            out[n] = reader.read(n)
+    return out
+
+
+def chain_versions(cluster, name: str, version: int, rank: int = 0,
+                   *, distance: int = 1) -> list[int]:
+    """The delta chain of ``version``, newest first, ending at its full
+    base — [version] when the shard is already full."""
+    out = []
+    seen = set()
+    v: Optional[int] = version
+    while v is not None:
+        if int(v) in seen or len(out) >= MAX_CHAIN_DEPTH:
+            raise IOError(f"delta chain exceeds {MAX_CHAIN_DEPTH} links or "
+                          f"cycles at v{v} (corrupt parent metadata)")
+        seen.add(int(v))
+        out.append(int(v))
+        m = _manifest_for(cluster, name, v)
+        digest = (m or {}).get("shard_digests", {}).get(rank)
+        blob = fetch_shard_any_level(cluster, name, v, rank,
+                                     distance=distance, expected_digest=digest)
+        if blob is None:
+            raise IOError(f"chain walk: v{v} unrecoverable")
+        reader = fmt.ShardReader(blob)
+        if not reader.delta_regions():
+            break
+        v = (reader.meta.get("delta") or {}).get("parent")
+        if v is None:
+            v = (m or {}).get("parent")
+    return out
 
 
 def load_all_regions(cluster, name: str, version: int, *, distance: int = 1

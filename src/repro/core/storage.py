@@ -23,9 +23,29 @@ New tier kinds (burst buffer, object store, ...) plug in via
 from __future__ import annotations
 
 import os
+import re
 import threading
 from dataclasses import dataclass, field
 from typing import Callable, Optional
+
+_UNESCAPE_RE = re.compile(r"_[us]")
+
+
+def escape_key(key: str) -> str:
+    """Filesystem-safe, *reversible* encoding of a storage key.
+
+    The historical ``key.replace("/", "__")`` was lossy: a checkpoint name
+    containing ``__`` round-tripped through ``keys()`` as ``/``, so prefix
+    GC could miss or mis-list artifacts.  This is a character homomorphism
+    ("_" -> "_u", "/" -> "_s"), so it is bijective AND prefix-preserving:
+    ``escape(p)`` is a prefix of ``escape(k)`` iff ``p`` is a prefix of
+    ``k`` — exactly what prefix listing needs."""
+    return key.replace("_", "_u").replace("/", "_s")
+
+
+def unescape_key(name: str) -> str:
+    return _UNESCAPE_RE.sub(
+        lambda m: "_" if m.group(0) == "_u" else "/", name)
 
 
 @dataclass
@@ -113,8 +133,7 @@ class FileTier(StorageTier):
         os.makedirs(root, exist_ok=True)
 
     def _path(self, key: str) -> str:
-        safe = key.replace("/", "__")
-        return os.path.join(self.root, safe)
+        return os.path.join(self.root, escape_key(key))
 
     def put(self, key, data):
         self._enter()
@@ -145,35 +164,69 @@ class FileTier(StorageTier):
             pass
 
     def keys(self, prefix=""):
-        safe = prefix.replace("/", "__")
-        return [f.replace("__", "/") for f in os.listdir(self.root)
+        safe = escape_key(prefix)
+        return [unescape_key(f) for f in os.listdir(self.root)
                 if f.startswith(safe) and not f.endswith(".tmp")]
+
+
+#: KV journal entry framing: magic + 24-hex-char digest + payload.  The
+#: digest makes torn/corrupted entries detectable on reload (they are
+#: skipped, not loaded — a poisoned value would defeat restart's fallback
+#: because the in-memory store is trusted).
+KV_JOURNAL_MAGIC = b"VKVJ1\x00"
+_KV_DIGEST_LEN = 24
 
 
 class KVTier(StorageTier):
     """DAOS stand-in: optimized low-level put/get of key-value pairs, with an
-    optional write-through journal file for persistence across restarts."""
+    optional write-through journal file for persistence across restarts.
+
+    Journal entries are fsynced before the atomic publish (unlike the
+    historical version, a crash cannot publish a torn entry) and framed with
+    a digest; entries that fail verification on reload are skipped."""
 
     def __init__(self, name="kv", gbps=20.0, journal: Optional[str] = None):
         super().__init__(TierInfo(name, "kv", gbps, persistent=journal is not None,
                                   node_local=False))
         self._store: dict[str, bytes] = {}
         self._journal = journal
+        self.journal_skipped: list[str] = []  # corrupted entries on reload
         if journal and os.path.isdir(journal):
+            from repro.kernels import ops as kops
+
             for f in os.listdir(journal):
+                if f.endswith(".tmp"):
+                    continue
                 with open(os.path.join(journal, f), "rb") as fh:
-                    self._store[f.replace("__", "/")] = fh.read()
+                    blob = fh.read()
+                key = unescape_key(f)
+                if not blob.startswith(KV_JOURNAL_MAGIC):
+                    self.journal_skipped.append(key)
+                    continue
+                head = len(KV_JOURNAL_MAGIC)
+                want = blob[head:head + _KV_DIGEST_LEN].decode("ascii", "replace")
+                data = blob[head + _KV_DIGEST_LEN:]
+                if kops.digest(data) != want:
+                    self.journal_skipped.append(key)
+                    continue
+                self._store[key] = data
 
     def put(self, key, data):
         self._enter()
         try:
             self._store[key] = bytes(data)
             if self._journal:
+                from repro.kernels import ops as kops
+
                 os.makedirs(self._journal, exist_ok=True)
-                p = os.path.join(self._journal, key.replace("/", "__"))
+                p = os.path.join(self._journal, escape_key(key))
                 with open(p + ".tmp", "wb") as f:
+                    f.write(KV_JOURNAL_MAGIC)
+                    f.write(kops.digest(data).encode("ascii"))
                     f.write(data)
-                os.replace(p + ".tmp", p)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(p + ".tmp", p)  # atomic publish
         finally:
             self._exit()
 
@@ -187,7 +240,7 @@ class KVTier(StorageTier):
         self._store.pop(key, None)
         if self._journal:
             try:
-                os.remove(os.path.join(self._journal, key.replace("/", "__")))
+                os.remove(os.path.join(self._journal, escape_key(key)))
             except FileNotFoundError:
                 pass
 

@@ -41,3 +41,50 @@ def checksum_pallas(x: jax.Array, *, block_rows: int = BLOCK_ROWS,
         out_specs=pl.BlockSpec((block_rows, 2), lambda i: (i, 0)),
         interpret=interpret,
     )(x)
+
+
+# ---------------------------------------------------------------------------
+# block fingerprints (incremental-checkpoint dirty detection)
+# ---------------------------------------------------------------------------
+
+#: odd multiplicative constants (xxhash/Murmur finalizer family) — uint32
+#: wraparound multiplication mixes every input bit into the high bits, which
+#: the weighted Fletcher sums above don't (a flipped low bit in two words can
+#: cancel).  Dirty detection needs per-chunk avalanche, not just order
+#: sensitivity.
+_MIX1 = 0x9E3779B1
+_MIX2 = 0x85EBCA77
+_MIX3 = 0xC2B2AE3D
+
+
+def _blockhash_kernel(x_ref, o_ref):
+    x = x_ref[:, :]  # (block_rows, chunk) uint32
+    rows, chunk = x.shape
+    i = jax.lax.broadcasted_iota(jnp.uint32, (rows, chunk), 1)
+    # per-word avalanche, then two independent position-weighted reductions
+    y = (x ^ (x >> 15)) * jnp.uint32(_MIX1)
+    y = (y ^ (y >> 13)) * jnp.uint32(_MIX2)
+    y = y ^ (y >> 16)
+    w1 = i * jnp.uint32(2) + jnp.uint32(1)              # odd weights
+    w2 = (i + jnp.uint32(1)) * jnp.uint32(_MIX3) | jnp.uint32(1)
+    h1 = jnp.sum(y * w1, axis=1, dtype=jnp.uint32)
+    h2 = jnp.sum((y ^ w2) * w2, axis=1, dtype=jnp.uint32)
+    o_ref[:, 0] = h1
+    o_ref[:, 1] = h2
+
+
+def blockhash_pallas(x: jax.Array, *, block_rows: int = BLOCK_ROWS,
+                     interpret: bool = True) -> jax.Array:
+    """x: (n_chunks, chunk_words) uint32 -> (n_chunks, 2) uint32 mixed
+    fingerprints (64 collision bits per chunk)."""
+    n, chunk = x.shape
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0, (n, block_rows)
+    return pl.pallas_call(
+        _blockhash_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, 2), jnp.uint32),
+        grid=(n // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, chunk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, 2), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x)

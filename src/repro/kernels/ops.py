@@ -96,6 +96,36 @@ def fletcher_chunks(words: jax.Array | np.ndarray,
     return np.asarray(out[:rows])
 
 
+@partial(jax.jit, static_argnames=("interpret",))
+def _blockhash_j(x, interpret=True):
+    return _ck.blockhash_pallas(x, interpret=interpret)
+
+
+def block_fingerprints(buf: bytes | np.ndarray,
+                       chunk_bytes: int = 4 * _ck.CHUNK_WORDS) -> np.ndarray:
+    """Per-chunk mixed fingerprints of a byte buffer: (n_chunks, 2) uint32.
+
+    ``chunk_bytes`` must be a multiple of 4; the trailing partial chunk is
+    zero-padded (same rule as the delta encoder, so fingerprints of the same
+    logical chunk always agree)."""
+    assert chunk_bytes % 4 == 0 and chunk_bytes > 0, chunk_bytes
+    words = bytes_to_u32(buf)
+    if words.shape[0] == 0:
+        return np.zeros((0, 2), np.uint32)
+    chunk = chunk_bytes // 4
+    rows = -(-words.shape[0] // chunk)
+    # single-tile inputs run at their natural row count (blockhash_pallas
+    # shrinks block_rows to n); only multi-tile inputs pad to the tile grid.
+    rows_pad = rows if rows <= _ck.BLOCK_ROWS \
+        else -(-rows // _ck.BLOCK_ROWS) * _ck.BLOCK_ROWS
+    total = rows_pad * chunk
+    w = jnp.asarray(words)
+    if total != w.shape[0]:
+        w = jnp.concatenate([w, jnp.zeros((total - w.shape[0],), jnp.uint32)])
+    out = _blockhash_j(w.reshape(rows_pad, chunk), interpret=_interpret())
+    return np.asarray(out[:rows])
+
+
 def digest(buf: bytes | np.ndarray) -> str:
     """Hex digest of a byte buffer (chunk checksums folded host-side)."""
     words = bytes_to_u32(buf)

@@ -26,6 +26,19 @@ def checksum_ref(x: jax.Array) -> jax.Array:
     return jnp.stack([c1, c2], axis=1)
 
 
+def blockhash_ref(x: jax.Array) -> jax.Array:
+    """x: (n_chunks, chunk) uint32 -> (n_chunks, 2) uint32."""
+    i = (jnp.arange(x.shape[1], dtype=jnp.uint32))[None, :]
+    y = (x ^ (x >> 15)) * jnp.uint32(0x9E3779B1)
+    y = (y ^ (y >> 13)) * jnp.uint32(0x85EBCA77)
+    y = y ^ (y >> 16)
+    w1 = i * jnp.uint32(2) + jnp.uint32(1)
+    w2 = (i + jnp.uint32(1)) * jnp.uint32(0xC2B2AE3D) | jnp.uint32(1)
+    h1 = jnp.sum(y * w1, axis=1, dtype=jnp.uint32)
+    h2 = jnp.sum((y ^ w2) * w2, axis=1, dtype=jnp.uint32)
+    return jnp.stack([h1, h2], axis=1)
+
+
 def quantize_ref(x: jax.Array):
     x = x.astype(jnp.float32)
     absmax = jnp.max(jnp.abs(x), axis=1)

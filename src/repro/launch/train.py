@@ -47,6 +47,10 @@ def main(argv=None):
     ap.add_argument("--mode", default="async", choices=["async", "sync", "off"])
     ap.add_argument("--capture", default="fused", choices=["fused", "standalone"])
     ap.add_argument("--encoding", default="raw", choices=["raw", "q8", "zlib"])
+    ap.add_argument("--delta", action="store_true",
+                    help="incremental checkpoints: ship only dirty chunks")
+    ap.add_argument("--delta-chunk-kb", type=int, default=64)
+    ap.add_argument("--delta-max-chain", type=int, default=8)
     ap.add_argument("--interval-s", type=float, default=None)
     ap.add_argument("--phase-predictor", default="ema",
                     choices=["none", "ema", "gru"])
@@ -62,13 +66,18 @@ def main(argv=None):
     stream = SyntheticStream(cfg, shape, seed=1234)
 
     # single-host run, one rank: local write + external flush, no partner/XOR
+    modules = [ModuleSpec("interval", {"interval_s": args.interval_s}),
+               ModuleSpec("serialize", {"encoding": args.encoding}),
+               ModuleSpec("local"),
+               ModuleSpec("flush")]
+    if args.delta:
+        modules.insert(1, ModuleSpec("delta", {
+            "chunk_bytes": args.delta_chunk_kb * 1024,
+            "max_chain": args.delta_max_chain}))
     pipeline = PipelineSpec(
         name=f"train-{args.arch}",
         mode="sync" if args.mode == "sync" else "async",
-        modules=[ModuleSpec("interval", {"interval_s": args.interval_s}),
-                 ModuleSpec("serialize", {"encoding": args.encoding}),
-                 ModuleSpec("local"),
-                 ModuleSpec("flush")],
+        modules=modules,
         phase_predictor=args.phase_predictor,
     )
     client = None

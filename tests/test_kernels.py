@@ -11,7 +11,7 @@ from hypothesis import given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
 from repro.kernels import ops, ref
-from repro.kernels.checksum import checksum_pallas
+from repro.kernels.checksum import blockhash_pallas, checksum_pallas
 from repro.kernels.quantize import dequantize_pallas, quantize_pallas
 from repro.kernels.xor_parity import xor_pair_pallas, xor_reduce_pallas
 
@@ -76,6 +76,43 @@ def test_checksum_detects_reorder():
     a = np.asarray(checksum_pallas(jnp.asarray(x), interpret=True))
     b = np.asarray(checksum_pallas(jnp.asarray(y), interpret=True))
     assert a[0, 0] == b[0, 0] and a[0, 1] != b[0, 1]
+
+
+@pytest.mark.parametrize("rows,chunk", [(8, 256), (16, 2048), (32, 512)])
+def test_blockhash_sweep(rows, chunk):
+    x = RNG.integers(0, 2**32, size=(rows, chunk), dtype=np.uint32)
+    got = blockhash_pallas(jnp.asarray(x), block_rows=8, interpret=True)
+    want = ref.blockhash_ref(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_blockhash_avalanche_on_low_bit():
+    """A single low-bit flip must change the chunk fingerprint — the plain
+    Fletcher sums can cancel such flips, the mixed hash must not."""
+    x = RNG.integers(0, 2**32, size=(8, 256), dtype=np.uint32)
+    y = x.copy()
+    y[3, 17] ^= 1
+    a = np.asarray(blockhash_pallas(jnp.asarray(x), interpret=True))
+    b = np.asarray(blockhash_pallas(jnp.asarray(y), interpret=True))
+    assert (a[3] != b[3]).any()
+    np.testing.assert_array_equal(np.delete(a, 3, 0), np.delete(b, 3, 0))
+
+
+@given(st.binary(min_size=0, max_size=8192), st.integers(1, 64))
+@settings(max_examples=25, deadline=None)
+def test_block_fingerprints_locality(buf, chunk_words):
+    """Flipping one byte changes exactly that chunk's fingerprint."""
+    chunk_bytes = 4 * chunk_words
+    fp = ops.block_fingerprints(buf, chunk_bytes=chunk_bytes)
+    assert fp.shape[0] == -(-len(buf) // chunk_bytes)
+    if not buf:
+        return
+    pos = len(buf) // 2
+    mod = bytearray(buf)
+    mod[pos] ^= 0xA5
+    fp2 = ops.block_fingerprints(bytes(mod), chunk_bytes=chunk_bytes)
+    changed = np.nonzero((fp != fp2).any(axis=1))[0]
+    np.testing.assert_array_equal(changed, [pos // chunk_bytes])
 
 
 @given(st.binary(min_size=0, max_size=4096))
