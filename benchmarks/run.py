@@ -18,6 +18,10 @@ scale with the scaling factor stated in the ``derived`` column.
   bench_delta     incremental (differential) checkpointing: bytes written
                   per checkpoint and blocking time, full vs delta shards on
                   a 1%-dirty workload (write amplification).
+  bench_aggregation  aggregated write path: many small delta shards (8
+                  ranks x 8 regions, ~1% dirty) coalesced into one segment
+                  put per version — L3 puts/version and flush wall time,
+                  aggregated vs direct.
   bench_scale     modeled weak-scaling of the L3 flush under shared-PFS
                   bandwidth (flush contention), from the storage model.
 
@@ -278,6 +282,59 @@ def bench_delta():
         f"blocking={delta_t * 1e3:.1f}ms")
 
 
+def bench_aggregation():
+    """The small-write bottleneck: with delta shards at ~1% dirty each
+    rank's L3 blob is tiny, so per-put overhead dominates the flush.  The
+    segment store coalesces every rank's shard + parity + manifests into
+    ONE sequential put per version; this reports external-tier puts per
+    checkpoint version and the per-version flush wall time, direct vs
+    aggregated (8 ranks, 8 regions each)."""
+    from repro.core import Cluster, VelocClient, VelocConfig
+
+    nranks, nregions = 8, 8
+    n = (128 << 10) // 4  # 128 KiB of f32 per region
+    rng = np.random.default_rng(0)
+    base = [{f"w{j}": rng.standard_normal(n).astype(np.float32) + r
+             for j in range(nregions)} for r in range(nranks)]
+    dirty = max(1, n // 100)
+
+    def run(aggregate):
+        root = f"/tmp/veloc_bench_agg_{int(aggregate)}"
+        shutil.rmtree(root, ignore_errors=True)
+        cfg = VelocConfig(scratch=root, mode="sync", delta=True,
+                          delta_chunk_bytes=16 * 1024, partner=False,
+                          xor_group=4, flush=True, keep_versions=20,
+                          aggregate=aggregate)
+        cluster = Cluster(cfg, nranks=nranks)
+        clients = [VelocClient(cfg, cluster, rank=r) for r in range(nranks)]
+        state = [{k: v.copy() for k, v in s.items()} for s in base]
+        for r, c in enumerate(clients):  # v1: full shards
+            c.checkpoint(state[r], version=1, device_snapshot=False)
+        puts0 = sum(t.put_calls for t in cluster.external_tiers)
+        versions = range(2, 6)
+        t0 = time.perf_counter()
+        for v in versions:
+            for r, c in enumerate(clients):
+                for j in range(nregions):
+                    w = state[r][f"w{j}"].copy()
+                    lo = (v * 9973 + r * 131 + j * 17) % (n - dirty)
+                    w[lo:lo + dirty] += 1.0
+                    state[r][f"w{j}"] = w
+                c.checkpoint(state[r], version=v, device_snapshot=False)
+        dt = (time.perf_counter() - t0) / len(versions)
+        puts = (sum(t.put_calls for t in cluster.external_tiers) - puts0) \
+            / len(versions)
+        return puts, dt
+
+    d_puts, d_t = run(False)
+    a_puts, a_t = run(True)
+    row("aggregation_off_flush", d_t * 1e6, f"{d_puts:.1f}l3_puts_per_version")
+    row("aggregation_on_flush", a_t * 1e6,
+        f"{a_puts:.1f}l3_puts_per_version,"
+        f"put_reduction={d_puts / max(a_puts, 1e-9):.1f}x,"
+        f"speedup={d_t / max(a_t, 1e-9):.2f}x")
+
+
 def bench_scale():
     """Weak-scaling model of the L3 flush: N nodes share the PFS; per-node
     flush time grows linearly while L1+L2 stay flat — the paper's core
@@ -296,7 +353,8 @@ def bench_scale():
 
 
 ALL_BENCHES = (bench_levels, bench_engine, bench_erasure, bench_capture,
-               bench_async, bench_delta, bench_interval, bench_scale)
+               bench_async, bench_delta, bench_aggregation, bench_interval,
+               bench_scale)
 
 
 def main(argv=None) -> None:

@@ -37,7 +37,8 @@ from repro.core.modules import CheckpointContext
 from repro.core.phases import EMAPhasePredictor, GRUPhasePredictor
 from repro.core.pipeline import ModuleSpec, PipelineSpec
 from repro.core.storage import (StorageTier, TierSpec, TierTopology,
-                                default_external_specs, default_node_specs)
+                                WriteBatch, default_external_specs,
+                                default_node_specs, pick_tier)
 
 
 @dataclass
@@ -61,6 +62,9 @@ class VelocConfig:
     delta: bool = False                 # incremental (differential) shards
     delta_chunk_bytes: int = 64 * 1024  # dirty-detection granularity
     delta_max_chain: int = 8            # deltas before a forced full shard
+    aggregate: bool = False             # coalesce L3 blobs into one segment
+    compact_threshold: int = 0          # deltas before auto-compaction (0=off)
+    compact_async: bool = False         # auto-compact in the maintenance lane
     partner: bool = True
     partner_distance: int = 1
     xor_group: int = 4                  # 0 disables the XOR module
@@ -107,15 +111,23 @@ class VelocConfig:
                             blocking_cut=5,
                             backend_workers=self.backend_workers,
                             phase_predictor=self.phase_predictor,
-                            keep_versions=self.keep_versions)
+                            keep_versions=self.keep_versions,
+                            aggregate=self.aggregate,
+                            compact_threshold=self.compact_threshold,
+                            compact_async=self.compact_async)
 
     def to_tier_topology(self) -> TierTopology:
         """Compile the storage switches into the declarative tier layout
-        (the default DRAM + node-local SSD + shared PFS, optionally + KV)."""
+        (the default DRAM + node-local SSD + shared PFS, optionally + KV).
+        ``aggregate=True`` opts every external tier into the segment write
+        path (node-local tiers keep direct puts)."""
         external = default_external_specs()
         if self.use_kv_external:
             external.append(TierSpec("kv", name="kv", gbps=2.0,
                                      options={"journal": "kvstore"}))
+        if self.aggregate:
+            for s in external:
+                s.aggregate = True
         return TierTopology(scratch=self.scratch, node=default_node_specs(),
                             external=external)
 
@@ -134,19 +146,26 @@ class Cluster:
 
     def __init__(self, topology: Union[TierTopology, VelocConfig],
                  nranks: int = 1, *, group_size: Optional[int] = None,
-                 rate_limit_bps: Optional[float] = None):
+                 rate_limit_bps: Optional[float] = None,
+                 aggregate: Optional[bool] = None):
         if isinstance(topology, VelocConfig):
             self.cfg: Optional[VelocConfig] = topology
             if group_size is None:
                 group_size = topology.xor_group
             if rate_limit_bps is None:
                 rate_limit_bps = topology.rate_limit_bps
+            if aggregate is None:
+                aggregate = topology.aggregate
             topology = topology.to_tier_topology()
         else:
             self.cfg = None
         self.topology = topology
         self.nranks = nranks
         self.group_size = int(group_size or 0)
+        #: aggregated write path: None = undecided (adopted from the first
+        #: client's PipelineSpec), else the explicit on/off switch.  Takes
+        #: effect only on external tiers whose TierInfo opted in.
+        self.aggregate = aggregate
         self._lock = threading.Lock()
         self._node_tiers = [topology.build_node(r) for r in range(nranks)]
         self.external_tiers: list[StorageTier] = topology.build_external()
@@ -163,6 +182,17 @@ class Cluster:
         # the parent link is only cleared once EVERY rank has — earlier,
         # other ranks' delta shards still need the chain.
         self._compacted: dict[tuple, set] = {}
+        # -- aggregated write path state --------------------------------
+        self._batches: dict[tuple, WriteBatch] = {}  # (name, version) open
+        self._sealed: dict[tuple, str] = {}  # (name, version) -> tier name
+        self._seal_errors: dict[tuple, str] = {}
+        self._vlocks: dict[tuple, threading.Lock] = {}  # per-version rewrite
+        self._seg_lock = threading.Lock()
+        self._segcache: dict[tuple, fmt.SegmentReader] = {}
+        #: torn / corrupt segments observed while reading (restart surfaces
+        #: these per candidate instead of silently decoding garbage)
+        self.segment_diagnostics: list[dict] = []
+        self._seg_diagnosed: set = set()
 
     # ------------------------------------------------------------------
     def node_tiers(self, rank: int) -> list[StorageTier]:
@@ -177,10 +207,257 @@ class Cluster:
         except Exception:  # noqa: BLE001
             return None
 
+    # ------------------------------------------------------------------
+    # aggregated write path: staging, sealing, segment-resolved reads
+    # ------------------------------------------------------------------
+    def aggregate_target(self) -> Optional[StorageTier]:
+        """The external tier aggregated segments land on, or None when
+        aggregation is off / no external tier opted in (direct puts)."""
+        if not self.aggregate:
+            return None
+        elig = [t for t in self.external_tiers if t.info.aggregate]
+        if not elig:
+            return None
+        return pick_tier(elig)
+
+    def _diagnose_segment(self, tier_name: str, key: str, err: Exception):
+        sig = (tier_name, key, f"{type(err).__name__}: {err}")
+        with self._seg_lock:
+            if sig in self._seg_diagnosed:
+                return
+            self._seg_diagnosed.add(sig)
+            self.segment_diagnostics.append(
+                {"tier": tier_name, "key": key,
+                 "error": f"{type(err).__name__}: {err}"})
+
+    #: cached SegmentReaders pin their whole blob in memory; keep only the
+    #: most recently touched segments (restart walks newest-first anyway).
+    _SEGCACHE_MAX = 16
+
+    def _cache_segment(self, tier_name: str, skey: str,
+                       reader: fmt.SegmentReader):
+        with self._seg_lock:
+            self._segcache.pop((tier_name, skey), None)
+            self._segcache[(tier_name, skey)] = reader
+            while len(self._segcache) > self._SEGCACHE_MAX:
+                self._segcache.pop(next(iter(self._segcache)))
+
+    def _segment_reader(self, tier: StorageTier, name: str, version: int
+                        ) -> Optional[fmt.SegmentReader]:
+        """Cached index over this tier's segment for one version.  A torn /
+        truncated segment parses to None with a diagnostic — never half-
+        decoded.  Deliberately NOT gated on ``tier.info.aggregate``: the
+        flag steers the WRITE path only, a segment that exists on disk must
+        stay readable even when the process restarts with aggregation off."""
+        skey = fmt.segment_key(name, version)
+        ck = (tier.info.name, skey)
+        with self._seg_lock:
+            reader = self._segcache.get(ck)
+        if reader is not None:
+            return reader
+        blob = self._tier_get(tier, skey)
+        if blob is None:
+            return None
+        try:
+            reader = fmt.SegmentReader(blob)
+        except Exception as e:  # noqa: BLE001 — torn segment
+            self._diagnose_segment(tier.info.name, skey, e)
+            return None
+        self._cache_segment(tier.info.name, skey, reader)
+        return reader
+
+    def _segment_entry(self, tier: StorageTier, name: str, version: int,
+                       key: str) -> Optional[bytes]:
+        reader = self._segment_reader(tier, name, version)
+        if reader is None or key not in reader:
+            return None
+        try:
+            return reader.read(key)
+        except Exception as e:  # noqa: BLE001 — corrupt entry reads as miss
+            self._diagnose_segment(tier.info.name,
+                                   fmt.segment_key(name, version) + "#" + key,
+                                   e)
+            return None
+
+    def stage_l3(self, name: str, version: int, rank: int, shard: bytes,
+                 digest: str, meta: Optional[dict] = None) -> bool:
+        """Aggregated L3 write: stage this rank's shard into the version's
+        WriteBatch; the LAST rank to stage seals the batch — L3 manifest
+        included — into ONE segment put.  Returns True when this call
+        sealed; raises if the seal put fails (the caller records the L3
+        error and restart falls back)."""
+        with self._lock:
+            batch = self._batches.setdefault(
+                (name, version), WriteBatch(name, version))
+            batch.stage(fmt.shard_key(name, version, rank), shard)
+            reg = self._registry.setdefault((name, version, "L3"), {})
+            reg[rank] = digest
+            if meta:
+                self._note_meta_locked(name, version, meta)
+            if len(reg) < self.nranks:
+                return False
+            tier, batch = self._prepare_seal_locked(name, version, reg)
+        # the seal put — the largest write in the system — runs OUTSIDE the
+        # cluster lock so other ranks' staging/notes are never serialized
+        # behind slow external I/O.
+        self._do_seal(tier, batch)
+        return True
+
+    def stage_entry(self, name: str, version: int, key: str, data: bytes
+                    ) -> bool:
+        """Stage an auxiliary version blob (e.g. the erasure-group parity)
+        into the pending batch.  False once the version already sealed —
+        the caller falls back to a direct put."""
+        with self._lock:
+            if (name, version) in self._sealed:
+                return False
+            batch = self._batches.setdefault(
+                (name, version), WriteBatch(name, version))
+            batch.stage(key, data)
+            return True
+
+    def _prepare_seal_locked(self, name: str, version: int,
+                             reg: dict[int, str]):
+        """Stage the L3 manifest, close the batch and optimistically mark
+        the version sealed (late ``stage_entry`` racers fall back to direct
+        puts during the in-flight put) — the actual I/O happens in
+        ``_do_seal`` outside the lock."""
+        batch = self._batches.pop((name, version))
+        batch.stage(
+            fmt.manifest_key(name, version) + ".L3",
+            fmt.make_manifest(name, version, self.nranks, level="L3",
+                              shard_digests=reg,
+                              meta=self._meta.get((name, version), {}),
+                              parent=self._parents.get((name, version)),
+                              group_size=self.group_size))
+        tier = self.aggregate_target()
+        if tier is None:  # tiers swapped out mid-flight; nothing to seal to
+            self._batches[(name, version)] = batch
+            raise RuntimeError("no aggregating external tier to seal to")
+        self._sealed[(name, version)] = tier.info.name
+        return tier, batch
+
+    def _do_seal(self, tier: StorageTier, batch: WriteBatch):
+        name, version = batch.name, batch.version
+        seg = fmt.encode_segment(batch.entries,
+                                 meta={"name": name, "version": version,
+                                       "nranks": self.nranks})
+        skey = fmt.segment_key(name, version)
+        try:
+            tier.put(skey, seg)
+        except Exception as e:  # noqa: BLE001 — the batch is DROPPED, not
+            # restored: with no retry policy a kept-around dead batch would
+            # silently swallow later compaction/manifest writes for this
+            # version (they stage instead of hitting the tiers).  The
+            # version reads as unsealed; direct puts take over from here.
+            with self._lock:
+                self._sealed.pop((name, version), None)
+                self._seal_errors[(name, version)] = \
+                    f"{type(e).__name__}: {e}"
+            raise
+        self._cache_segment(tier.info.name, skey, fmt.SegmentReader(seg))
+
+    def _version_rewrite_lock_locked(self, name: str, version: int
+                                     ) -> threading.Lock:
+        """Per-version rewrite lock (cluster lock must be held to fetch).
+        Segment read-modify-writes serialize on THIS lock and run with the
+        global lock released — maintenance-lane compaction of one version
+        must not stall every rank's staging/notes behind external I/O
+        (lock order: cluster lock -> version lock -> _seg_lock)."""
+        return self._vlocks.setdefault((name, version), threading.Lock())
+
+    def _stage_into_batch_locked(self, name: str, version: int,
+                                 repl: dict[str, bytes]) -> bool:
+        """Replace staged bytes while the version is still batching (the
+        seal must write current — e.g. compacted — blobs, not the stale
+        staging-time ones).  Cluster lock held; False when no batch is
+        open."""
+        batch = self._batches.get((name, version))
+        if batch is None:
+            return False
+        for key, blob in repl.items():
+            batch.stage(key, blob)
+        return True
+
+    def _rewrite_segments_io(self, name: str, version: int,
+                             repl: dict[str, bytes]) -> set:
+        """Replace entries inside every external segment of this version
+        (read-modify-write, atomic per tier).  Caller holds the version's
+        rewrite lock, NOT the cluster lock.  Returns the tier names whose
+        segment was rewritten."""
+        out: set = set()
+        skey = fmt.segment_key(name, version)
+        for tier in self.external_tiers:
+            # no aggregate gate: a segment written by an aggregating run
+            # must stay maintainable after a restart with aggregation off
+            blob = self._tier_get(tier, skey)
+            if blob is None:
+                continue
+            try:
+                reader = fmt.SegmentReader(blob)
+            except Exception as e:  # noqa: BLE001
+                self._diagnose_segment(tier.info.name, skey, e)
+                continue
+            # verify=False: untouched entries are copied byte-for-byte —
+            # a pre-existing corrupt entry stays corrupt, it must not make
+            # the rewrite abort and strand the replacement blobs.
+            entries = {n: reader.read(n, verify=False)
+                       for n in reader.names()}
+            entries.update(repl)
+            seg = fmt.encode_segment(entries, meta=reader.meta)
+            tier.put(skey, seg)
+            self._cache_segment(tier.info.name, skey, fmt.SegmentReader(seg))
+            out.add(tier.info.name)
+        return out
+
+    def rewrite_entries(self, name: str, version: int,
+                        repl: dict[str, bytes]) -> set:
+        """Public segment rewrite hook (compaction, parity refresh)."""
+        with self._lock:
+            if self._stage_into_batch_locked(name, version, repl):
+                return {"(pending-batch)"}
+            vlock = self._version_rewrite_lock_locked(name, version)
+        with vlock:
+            return self._rewrite_segments_io(name, version, repl)
+
+    def _publish_many_locked(self, name: str, version: int,
+                             pubs: dict[str, bytes], *,
+                             probe_segments: bool = True):
+        """Write version artifacts (manifests) to the external tiers —
+        staged into the still-open batch when the version is batching,
+        inside the sealed segment where one exists, direct puts elsewhere.
+        ``probe_segments=False`` skips the per-tier segment lookup for
+        versions that cannot have one (the direct write path)."""
+        if not pubs:
+            return
+        if self._stage_into_batch_locked(name, version, pubs):
+            return
+        seg_tiers: set = set()
+        if probe_segments:
+            with self._version_rewrite_lock_locked(name, version):
+                seg_tiers = self._rewrite_segments_io(name, version, pubs)
+        for tier in self.external_tiers:
+            if tier.info.name in seg_tiers:
+                continue
+            for key, blob in pubs.items():
+                tier.put(key, blob)
+
+    def _note_meta_locked(self, name: str, version: int, meta: dict):
+        self._meta[(name, version)] = dict(meta)
+        dmeta = meta.get("delta") or {}
+        self._parents[(name, version)] = dmeta.get("parent") \
+            if dmeta.get("kind") == "delta" else None
+
     def fetch_shard(self, name: str, version: int, rank: int) -> Optional[bytes]:
         key = fmt.shard_key(name, version, rank)
-        for tier in self._node_tiers[rank] + self.external_tiers:
+        for tier in self._node_tiers[rank]:
             blob = self._tier_get(tier, key)
+            if blob is not None:
+                return blob
+        for tier in self.external_tiers:
+            blob = self._tier_get(tier, key)
+            if blob is None:
+                blob = self._segment_entry(tier, name, version, key)
             if blob is not None:
                 return blob
         return None
@@ -203,25 +480,30 @@ class Cluster:
         g = min(self.group_size, self.nranks)
         home = parity_home(group, g, self.nranks) if g >= 2 else -1
         key = fmt.parity_key(name, version, group)
-        tiers = (self._node_tiers[home] if 0 <= home < self.nranks else []) \
-            + self.external_tiers
-        for tier in tiers:
+        for tier in (self._node_tiers[home]
+                     if 0 <= home < self.nranks else []):
             blob = self._tier_get(tier, key)
+            if blob is not None:
+                return blob
+        for tier in self.external_tiers:
+            blob = self._tier_get(tier, key)
+            if blob is None:
+                blob = self._segment_entry(tier, name, version, key)
             if blob is not None:
                 return blob
         return None
 
     def note_shard(self, name, version, level, rank, digest, meta=None):
-        """Collective commit: last rank to report publishes the manifest."""
+        """Collective commit: last rank to report publishes the manifest.
+        While the version's aggregated batch is open the manifest is staged
+        there (it travels in the segment's single put); otherwise it is
+        written directly — through the sealed segment when one exists."""
         with self._lock:
             k = (name, version, level)
             reg = self._registry.setdefault(k, {})
             reg[rank] = digest
             if meta:
-                self._meta[(name, version)] = dict(meta)
-                dmeta = meta.get("delta") or {}
-                self._parents[(name, version)] = dmeta.get("parent") \
-                    if dmeta.get("kind") == "delta" else None
+                self._note_meta_locked(name, version, meta)
             if len(reg) == self.nranks:
                 blob = fmt.make_manifest(
                     name, version, self.nranks, level=level,
@@ -229,8 +511,12 @@ class Cluster:
                     parent=self._parents.get((name, version)),
                     group_size=self.group_size)
                 key = fmt.manifest_key(name, version) + f".{level}"
-                for tier in self.external_tiers:
-                    tier.put(key, blob)
+                self._publish_many_locked(
+                    name, version, {key: blob},
+                    # a version this process writes through the direct path
+                    # cannot have a segment — skip the per-tier probes
+                    probe_segments=bool(self.aggregate)
+                    or (name, version) in self._sealed)
 
     def republish_manifest(self, name, version, rank, digest, meta=None):
         """Post-compaction commit for one rank: replace its digest and
@@ -261,6 +547,7 @@ class Cluster:
                 if meta is not None:
                     self._meta[(name, version)] = dict(meta)
             parent = self._parents.get((name, version))
+            pubs: dict[str, bytes] = {}
             for (n, v, level), reg in self._registry.items():
                 if n != name or v != version:
                     continue
@@ -271,9 +558,14 @@ class Cluster:
                         shard_digests=reg,
                         meta=self._meta.get((name, version), {}),
                         parent=parent, group_size=self.group_size)
-                    key = fmt.manifest_key(name, version) + f".{level}"
-                    for tier in self.external_tiers:
-                        tier.put(key, blob)
+                    pubs[fmt.manifest_key(name, version) + f".{level}"] = blob
+            self._publish_many_locked(name, version, pubs)
+
+    def ranks_compacted(self, name: str, version: int) -> set:
+        """Ranks that have folded their shard of ``version`` full (the
+        parity refresh waits for its whole erasure group)."""
+        with self._lock:
+            return set(self._compacted.get((name, version), set()))
 
     def has_shard_record(self, name: str, version: int, rank: int) -> bool:
         """Did ``rank`` persist ``version`` at ANY level?  (Used by the
@@ -285,13 +577,34 @@ class Cluster:
 
     def manifests(self, name: str) -> list[dict]:
         out = {}
+
+        def note(blob):
+            if blob:
+                try:
+                    m = fmt.parse_manifest(blob)
+                except Exception:  # noqa: BLE001 — unparseable manifest
+                    return
+                out[(m["version"], m["level"])] = m
+
         for tier in self.external_tiers:
             for key in tier.keys(f"{name}/"):
                 if "/manifest" in key:
-                    blob = tier.get(key)
-                    if blob:
-                        m = fmt.parse_manifest(blob)
-                        out[(m["version"], m["level"])] = m
+                    note(self._tier_get(tier, key))
+                elif key.endswith("/segment"):
+                    # aggregated version: its manifests travel inside the
+                    # segment — resolve them through the cached index (a
+                    # torn segment is skipped with a diagnostic, so the
+                    # version simply isn't a restart candidate).
+                    try:
+                        version = int(key[len(name) + 1:].split("/")[0][1:])
+                    except ValueError:
+                        continue
+                    reader = self._segment_reader(tier, name, version)
+                    if reader is None:
+                        continue
+                    for en in reader.names():
+                        if "/manifest" in en:
+                            note(self._segment_entry(tier, name, version, en))
         return [m for _, m in sorted(out.items(), reverse=True)]
 
     # -- failure / GC ----------------------------------------------------
@@ -321,6 +634,14 @@ class Cluster:
                     frontier.append(p)
             drop = [v for v in versions if v not in live]
             for v in drop:
+                # serialize with any in-flight segment rewrite of this
+                # version (its lock is dropped for good afterwards; a
+                # rewrite racing PAST this point could at worst resurrect
+                # one orphan segment file, never a restart candidate)
+                vlock = self._vlocks.pop((name, v), None)
+                if vlock is not None:
+                    with vlock:
+                        pass
                 prefix = fmt.version_prefix(name, v)
                 for tiers in self._node_tiers:
                     for tier in tiers:
@@ -334,6 +655,13 @@ class Cluster:
                 self._meta.pop((name, v), None)
                 self._parents.pop((name, v), None)
                 self._compacted.pop((name, v), None)
+                self._batches.pop((name, v), None)
+                self._sealed.pop((name, v), None)
+                self._seal_errors.pop((name, v), None)
+                skey = fmt.segment_key(name, v)
+                with self._seg_lock:
+                    for ck in [ck for ck in self._segcache if ck[1] == skey]:
+                        self._segcache.pop(ck, None)
 
 
 class VelocClient:
@@ -370,6 +698,11 @@ class VelocClient:
             # manifests and parity lookups agree with what gets written
             # (every rank shares the cluster and derives the same value).
             cluster.group_size = spec.erasure_group_size()
+        if cluster.aggregate is None:
+            # same adoption for the aggregated write path: the shared
+            # cluster follows the first client's spec (every rank derives
+            # the same value from the same spec).
+            cluster.aggregate = spec.aggregate
         self.cluster = cluster
         self.rank = rank
         self.mesh = mesh
@@ -391,7 +724,10 @@ class VelocClient:
             self.backend = ActiveBackend(
                 workers=spec.backend_workers,
                 rate_limiter=self.cluster.rate_limiter,
-                phase_gate=self.cluster.phase_gate)
+                phase_gate=self.cluster.phase_gate,
+                maintenance_interval_s=spec.maintenance_interval_s)
+        self._compact_lock = threading.Lock()
+        self._compact_pending = False
         self.engine = spec.compile(backend=self.backend)
         self._history: list[dict] = []
         #: (version, level, error) entries for every restore candidate that
@@ -461,6 +797,8 @@ class VelocClient:
                               "blocking_s": ctx.results.get("blocking_s")})
         if self.spec.keep_versions:
             self.cluster.gc(self.name, self.spec.keep_versions + 1)
+        if not ctx.skipped and self.spec.compact_threshold:
+            self._maybe_compact(version)
         return fut
 
     def wait(self, version: Optional[int] = None, timeout: Optional[float] = None
@@ -549,6 +887,10 @@ class VelocClient:
             if tier.exists(key):
                 tier.put(key, shard)
                 wrote = True
+        # aggregated versions hold the shard inside the external segment:
+        # rewrite the entry in place (atomic read-modify-write per tier)
+        if self.cluster.rewrite_entries(name, version, {key: shard}):
+            wrote = True
         if self.cluster.nranks >= 2:
             from repro.core.erasure import partner_of
 
@@ -569,6 +911,108 @@ class VelocClient:
         except KeyError:
             pass
         return version
+
+    # ------------------------------------------------------------------
+    # background maintenance: auto-compaction + parity refresh
+    # ------------------------------------------------------------------
+    def _maybe_compact(self, version: int):
+        """Auto-compaction trigger (``spec.compact_threshold`` deltas in the
+        live chain).  With ``compact_async`` and an active backend the fold
+        runs in the maintenance lane — only while the checkpoint lanes are
+        idle, so it never fetches a shard that is still in flight and never
+        blocks ``checkpoint_end``.  Otherwise it runs inline (after
+        draining this version when a backend exists)."""
+        try:
+            dm = self.engine.module("delta")
+        except KeyError:
+            return
+        thr = self.spec.compact_threshold
+        if self.backend is not None and self.spec.compact_async:
+            with self._compact_lock:
+                if self._compact_pending:
+                    return  # one maintenance fold in flight is enough
+                self._compact_pending = True
+            self.backend.submit_maintenance(
+                f"compact:{self.name}:{self.rank}", version,
+                lambda: self._compact_task(dm, thr))
+            return
+        tracker = dm.tracker(self.name, self.rank)
+        # async mode reads the tracker one version late (the delta stage of
+        # the version just submitted runs in the backend) — the fold then
+        # simply triggers on the next checkpoint_end.
+        if not tracker.needs_compaction(thr):
+            return
+        if self.backend is not None:
+            self.wait(version)
+        self._compact_task(dm, thr)
+
+    def _compact_task(self, dm, threshold: int):
+        try:
+            tracker = dm.tracker(self.name, self.rank)
+            version = tracker.last_version
+            if not tracker.needs_compaction(threshold):
+                return
+            if not self.cluster.has_shard_record(self.name, version,
+                                                 self.rank):
+                return  # tip never persisted; the chain self-heals instead
+            self.compact(version)
+            # compaction rewrote primary/partner bytes but the group parity
+            # still encodes the pre-compaction deltas (restart skips it via
+            # digest checks): re-encode so the version regains full L2
+            # protection.  Gated on the whole group having folded — member
+            # bytes are final then, and only the group's last compacting
+            # rank pays the encode instead of every rank redundantly.
+            self.refresh_parity(version, require_full_group=True)
+        finally:
+            with self._compact_lock:
+                self._compact_pending = False
+
+    def refresh_parity(self, version: int, *,
+                       require_full_group: bool = False) -> bool:
+        """Re-encode this rank's erasure-group parity from the CURRENT
+        member shard bytes (e.g. after compaction rewrote them).  Writes to
+        wherever the group's parity lives — the parity home's node tier, or
+        the external tier (inside the version's segment when aggregated).
+        Returns False when the pipeline has no erasure module, a member
+        shard is unreachable, or ``require_full_group`` is set and some
+        group member has not compacted ``version`` yet (that member's later
+        refresh will cover the group)."""
+        from repro.core import erasure
+        from repro.core.modules import build_parity_payload
+
+        xopts = self.spec.module_options("xor")
+        if xopts is None:
+            return False
+        g = min(xopts.get("group_size", 4), self.cluster.nranks)
+        rs = xopts.get("rs_parity", 0)
+        if g < 2:
+            return False
+        gid, _ = erasure.group_of(self.rank, g)
+        members = [gid * g + i for i in range(g)
+                   if gid * g + i < self.cluster.nranks]
+        if require_full_group and not set(members) <= \
+                self.cluster.ranks_compacted(self.name, version):
+            return False
+        shards = [self.cluster.fetch_shard(self.name, version, r)
+                  for r in members]
+        if any(s is None for s in shards):
+            return False
+        payload = build_parity_payload(shards, members, rs)
+        pkey = fmt.parity_key(self.name, version, gid)
+        home = erasure.parity_home(gid, g, self.cluster.nranks)
+        if home >= 0:
+            tiers = self.cluster.node_tiers(home)
+            holders = [t for t in tiers if t.exists(pkey)]
+            for tier in holders:
+                tier.put(pkey, payload)
+            if not holders:
+                pick_tier(tiers).put(pkey, payload)
+            return True
+        if self.cluster.rewrite_entries(self.name, version, {pkey: payload}):
+            return True
+        pick_tier(self.cluster.external_tiers,
+                  need_persistent=True).put(pkey, payload)
+        return True
 
     def shutdown(self):
         if self.backend is not None:

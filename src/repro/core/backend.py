@@ -13,7 +13,13 @@ Strategies").
   - newest-version preemption: when checkpoints outpace draining, superseded
     versions of the same task kind are dropped (straggler mitigation — the
     app never blocks on a slow flush);
-  - deadlines: a task past its deadline is demoted, not blocking.
+  - deadlines: a task past its deadline is demoted, not blocking;
+  - a *maintenance lane* (``submit_maintenance``): strictly lower priority
+    than every checkpoint task — drained only while the checkpoint lanes
+    are idle (nothing queued, nothing running) and rate-limited to one task
+    start per ``maintenance_interval_s``.  Delta-chain compaction and
+    parity refresh run here so restart latency stays bounded without the
+    application (or its checkpoints) ever waiting on them.
 """
 from __future__ import annotations
 
@@ -72,15 +78,23 @@ class ActiveBackend:
     """Priority-queue worker pool for background checkpoint pipeline stages."""
 
     def __init__(self, workers: int = 1, rate_limiter: Optional[RateLimiter] = None,
-                 phase_gate: Optional[Callable[[], float]] = None):
+                 phase_gate: Optional[Callable[[], float]] = None,
+                 maintenance_interval_s: float = 0.0):
         self.rate_limiter = rate_limiter or RateLimiter(None)
         self.phase_gate = phase_gate  # returns seconds to wait before heavy IO
         self._heap: list[_Task] = []
+        self._maint: list[_Task] = []  # maintenance lane (idle-only)
+        self._maint_interval = maintenance_interval_s
+        self._maint_last: Optional[float] = None  # last maintenance start
         self._seq = 0
         self._cv = threading.Condition()
         self._done: dict[tuple[str, int], str] = {}  # (kind, version) -> status
         self._errors: list[str] = []
-        self._inflight = 0
+        #: exact in-flight tasks; status() reports "running" only for pairs
+        #: actually executing (the historical version answered "running" for
+        #: ANY pair whenever ANY worker was busy).
+        self._running: list[tuple[str, int]] = []
+        self._running_ckpt = 0  # checkpoint-lane tasks currently executing
         self._stop = False
         self._latest: dict[str, int] = {}  # kind -> newest version enqueued
         self._threads = [threading.Thread(target=self._worker, daemon=True,
@@ -122,17 +136,60 @@ class ActiveBackend:
         for cb in dropped:  # outside the lock: callbacks may block/log
             cb()
 
+    def submit_maintenance(self, kind: str, version: int, fn: Callable, *,
+                           priority: int = 90):
+        """Queue low-priority background maintenance (delta-chain
+        compaction, parity refresh, ...).  Maintenance never competes with
+        checkpoints: a task is only popped while the checkpoint lanes are
+        completely idle, and starts are spaced at least
+        ``maintenance_interval_s`` apart."""
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("backend stopped")
+            self._seq += 1
+            heapq.heappush(self._maint,
+                           _Task(priority, self._seq, version, kind, fn))
+            self._latest[kind] = max(self._latest.get(kind, -1), version)
+            self._cv.notify()
+
+    def _pop_maintenance_locked(self) -> Optional[_Task]:
+        if not self._maint or self._heap or self._running_ckpt:
+            return None  # checkpoint lanes not idle
+        if self._maint_interval > 0 and self._maint_last is not None and \
+                time.monotonic() - self._maint_last < self._maint_interval:
+            return None  # rate window not open yet
+        self._maint_last = time.monotonic()
+        return heapq.heappop(self._maint)
+
+    def _idle_wait_locked(self) -> Optional[float]:
+        """How long to wait for work: the rate-window remainder when only a
+        rate-limited maintenance task is pending, else indefinitely (woken
+        by submit / completion / shutdown notifies)."""
+        if self._maint and not self._heap and not self._running_ckpt and \
+                self._maint_interval > 0 and self._maint_last is not None:
+            return max(
+                0.01,
+                self._maint_last + self._maint_interval - time.monotonic())
+        return None
+
     def _worker(self):
         while True:
             with self._cv:
-                while not self._heap and not self._stop:
-                    self._cv.wait(0.1)
-                if self._stop and not self._heap:
-                    return
-                if not self._heap:
-                    continue
-                task = heapq.heappop(self._heap)
-                self._inflight += 1
+                task = None
+                while task is None:
+                    if self._heap:
+                        task, is_ckpt = heapq.heappop(self._heap), True
+                        break
+                    task = self._pop_maintenance_locked()
+                    if task is not None:
+                        is_ckpt = False
+                        break
+                    if self._stop:
+                        return
+                    self._cv.wait(self._idle_wait_locked())
+                if is_ckpt:
+                    self._running_ckpt += 1
+                self._running.append((task.kind, task.version))
             status = "done"
             try:
                 if task.deadline is not None and time.monotonic() > task.deadline:
@@ -150,7 +207,9 @@ class ActiveBackend:
                         f"{task.kind} v{task.version}:\n{traceback.format_exc()}")
             with self._cv:
                 self._done[(task.kind, task.version)] = status
-                self._inflight -= 1
+                self._running.remove((task.kind, task.version))
+                if is_ckpt:
+                    self._running_ckpt -= 1
                 self._cv.notify_all()
 
     # ------------------------------------------------------------------
@@ -159,15 +218,19 @@ class ActiveBackend:
         """Block until matching tasks drain.  Returns False on timeout."""
 
         def outstanding():
-            pend = [t for t in self._heap
+            pend = [t for t in self._heap + self._maint
                     if (kind is None or t.kind == kind)
                     and (version is None or t.version == version)]
             if pend:
                 return True
             if version is not None and kind is not None:
+                if (kind, version) in self._running:
+                    return True
                 return (kind, version) not in self._done and \
                     version <= self._latest.get(kind, -1)
-            return self._inflight > 0
+            if kind is not None:
+                return any(k == kind for k, _ in self._running)
+            return bool(self._running)
 
         end = None if timeout is None else time.monotonic() + timeout
         with self._cv:
@@ -179,19 +242,30 @@ class ActiveBackend:
         return True
 
     def status(self, kind: str, version: int) -> str:
+        """Exact task state: "queued" | "running" | a terminal status
+        ("done"/"error"/"superseded"/"deadline-miss") | "unknown" (never
+        submitted).  In-flight (kind, version) pairs are tracked precisely —
+        a busy worker no longer makes every unrelated pair read "running"."""
         with self._cv:
             if (kind, version) in self._done:
                 return self._done[(kind, version)]
-            for t in self._heap:
+            for t in self._heap + self._maint:
                 if t.kind == kind and t.version == version:
                     return "queued"
-        return "running" if self._inflight else "unknown"
+            if (kind, version) in self._running:
+                return "running"
+        return "unknown"
 
     def errors(self) -> list[str]:
         with self._cv:
             return list(self._errors)
 
     def shutdown(self, wait: bool = True):
+        with self._cv:
+            # draining must not sit out the maintenance rate window — run
+            # whatever is still queued immediately
+            self._maint_interval = 0.0
+            self._cv.notify_all()
         if wait:
             self.wait()
         with self._cv:

@@ -199,3 +199,11 @@ class DeltaTracker:
         if self.last_version == version:
             self.base_version = version
             self.chain_len = 0
+
+    def needs_compaction(self, threshold: int) -> bool:
+        """True when the live chain carries at least ``threshold`` deltas
+        since its full base — the client's auto-compaction trigger (the
+        fold itself runs inline or in the backend's maintenance lane,
+        depending on ``compact_async``)."""
+        return bool(threshold) and self.last_version is not None \
+            and self.chain_len >= threshold

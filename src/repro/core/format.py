@@ -9,6 +9,17 @@ the Pallas quantize kernel), "zlib".
 The manifest is the collective-commit record: shards are written first
 (atomic per-tier), then the manifest is published atomically; a checkpoint
 version exists iff its manifest does — torn checkpoints are impossible.
+
+The *segment* container (aggregated write path, Gossman et al. "Towards
+Aggregated Asynchronous Checkpointing") coalesces many small per-version
+blobs — every rank's shard, the group parity, the manifests — into ONE
+sequential object:  [SEG magic 8B][header_len u64][header JSON][payload].
+The header's entry index records (name, offset, length, digest) per staged
+blob; ``SegmentReader`` validates every entry's bounds up front, so a torn
+or truncated segment fails loudly at parse time and restart can skip it
+with a diagnostic instead of silently decoding garbage.  The same
+record-level framing (``encode_log_record`` / ``scan_log_records``) backs
+the KVTier's append-only journal log.
 """
 from __future__ import annotations
 
@@ -162,6 +173,167 @@ class ShardReader:
         if e["encoding"] == "zlib":
             return np.frombuffer(zlib.decompress(blob), dtype).reshape(shape)
         return np.frombuffer(blob, dtype).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# segment container (aggregated write path)
+# ---------------------------------------------------------------------------
+
+SEGMENT_MAGIC = b"VSEGJX1\x00"
+
+
+def segment_key(name: str, version: int) -> str:
+    """Key of the aggregated segment holding one version's small blobs."""
+    return f"{name}/v{version:08d}/segment"
+
+
+def encode_segment(entries, meta: dict | None = None) -> bytes:
+    """Pack named blobs into one sequential segment object.
+
+    ``entries`` is a dict or (key, bytes) iterable; each entry lands in the
+    header index as (name, offset, length, digest) so readers can resolve
+    and verify a single entry without touching the rest of the payload."""
+    items = entries.items() if isinstance(entries, dict) else entries
+    payload = io.BytesIO()
+    table = []
+    for key, blob in items:
+        blob = bytes(blob)
+        table.append({"name": key, "offset": payload.tell(),
+                      "length": len(blob), "digest": kops.digest(blob)})
+        payload.write(blob)
+    header = json.dumps({"entries": table, "meta": meta or {}}).encode()
+    out = io.BytesIO()
+    out.write(SEGMENT_MAGIC)
+    out.write(np.uint64(len(header)).tobytes())
+    out.write(header)
+    out.write(payload.getbuffer())
+    return out.getvalue()
+
+
+class SegmentReader:
+    """Index + entry access over one segment blob.
+
+    Parsing is strict: bad magic, an unparseable header, or any entry whose
+    (offset, length) extends past the payload raises IOError immediately —
+    a segment truncated mid-entry can never be half-read.  ``read`` verifies
+    the per-entry digest (IOError on mismatch)."""
+
+    def __init__(self, blob: bytes):
+        blob = bytes(blob)
+        if len(blob) < 16 or blob[:8] != SEGMENT_MAGIC:
+            raise IOError("bad segment magic")
+        hlen = int(np.frombuffer(blob[8:16], np.uint64)[0])
+        if 16 + hlen > len(blob):
+            raise IOError(f"segment header truncated "
+                          f"({len(blob) - 16}B < {hlen}B)")
+        try:
+            header = json.loads(blob[16:16 + hlen].decode())
+            table = header["entries"]
+        except Exception as e:  # noqa: BLE001 — any parse failure = torn
+            raise IOError(f"segment header unparseable: {e}") from None
+        self._payload = memoryview(blob)[16 + hlen:]
+        self.meta: dict = header.get("meta", {})
+        self._index: dict[str, dict] = {}
+        for e in table:
+            if e["offset"] + e["length"] > len(self._payload):
+                raise IOError(
+                    f"segment entry {e['name']!r} truncated: needs bytes "
+                    f"[{e['offset']}, {e['offset'] + e['length']}) of a "
+                    f"{len(self._payload)}B payload")
+            self._index[e["name"]] = e
+
+    def names(self) -> list[str]:
+        return list(self._index)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._index
+
+    def entry(self, name: str) -> dict:
+        return self._index[name]
+
+    def read(self, name: str, *, verify: bool = True) -> bytes:
+        e = self._index[name]
+        blob = bytes(self._payload[e["offset"]:e["offset"] + e["length"]])
+        if verify and kops.digest(blob) != e["digest"]:
+            raise IOError(f"segment entry {name!r} checksum mismatch")
+        return blob
+
+
+# ---------------------------------------------------------------------------
+# append-only log records (KV journal)
+# ---------------------------------------------------------------------------
+
+LOG_RECORD_MAGIC = b"VLOGJX1\x00"
+_LOG_DIGEST_LEN = 24
+
+
+def encode_log_record(key: str, data: bytes | None) -> bytes:
+    """One self-framing journal record: magic + key length (u32) + data
+    length (i64, -1 = tombstone) + key + digest + data.  The digest makes a
+    corrupted record detectable; the explicit lengths let a scanner resync
+    past it when the framing itself is intact."""
+    kb = key.encode()
+    payload = b"" if data is None else bytes(data)
+    out = io.BytesIO()
+    out.write(LOG_RECORD_MAGIC)
+    out.write(np.uint32(len(kb)).tobytes())
+    out.write(np.int64(-1 if data is None else len(payload)).tobytes())
+    out.write(kb)
+    out.write(kops.digest(payload).encode("ascii"))
+    out.write(payload)
+    return out.getvalue()
+
+
+def scan_log_records(blob: bytes
+                     ) -> tuple[list[tuple[str, bytes | None]], list[str]]:
+    """Replay an append-only log -> (records, skipped).
+
+    ``records`` preserves append order; a ``None`` value is a tombstone.
+    A record whose digest fails is skipped (its key lands in ``skipped``)
+    and the scan continues.  A corrupt FRAME (bad magic or lying lengths)
+    resyncs by scanning forward to the next record magic, so a flipped
+    byte mid-log costs that record, not every record after it; only a torn
+    tail with no further magic stops the scan."""
+    records: list[tuple[str, bytes | None]] = []
+    skipped: list[str] = []
+    off, total = 0, len(blob)
+    hdr = len(LOG_RECORD_MAGIC) + 4 + 8
+
+    def resync(bad_off: int) -> int:
+        nxt = blob.find(LOG_RECORD_MAGIC, bad_off + 1)
+        if nxt < 0:
+            skipped.append(f"<torn log frame at offset {bad_off}>")
+            return total
+        skipped.append(f"<corrupt log frame at offset {bad_off}, "
+                       f"resynced at {nxt}>")
+        return nxt
+
+    while off < total:
+        if off + hdr > total or \
+                blob[off:off + len(LOG_RECORD_MAGIC)] != LOG_RECORD_MAGIC:
+            off = resync(off)
+            continue
+        klen = int(np.frombuffer(
+            blob[off + len(LOG_RECORD_MAGIC):off + len(LOG_RECORD_MAGIC) + 4],
+            np.uint32)[0])
+        dlen = int(np.frombuffer(
+            blob[off + len(LOG_RECORD_MAGIC) + 4:off + hdr], np.int64)[0])
+        body = off + hdr
+        nbytes = max(dlen, 0)
+        if body + klen + _LOG_DIGEST_LEN + nbytes > total:
+            off = resync(off)
+            continue
+        key = blob[body:body + klen].decode("utf-8", "replace")
+        want = blob[body + klen:body + klen + _LOG_DIGEST_LEN] \
+            .decode("ascii", "replace")
+        data = blob[body + klen + _LOG_DIGEST_LEN:
+                    body + klen + _LOG_DIGEST_LEN + nbytes]
+        if kops.digest(data) != want:
+            skipped.append(key)
+        else:
+            records.append((key, None if dlen < 0 else bytes(data)))
+        off = body + klen + _LOG_DIGEST_LEN + nbytes
+    return records, skipped
 
 
 # ---------------------------------------------------------------------------

@@ -274,6 +274,25 @@ class PartnerModule(Module):
         return "ok"
 
 
+def build_parity_payload(shards: list[bytes], members: list[int],
+                         rs_parity: int = 0) -> bytes:
+    """Erasure-group parity payload over the member shards (XOR by default,
+    Reed-Solomon when ``rs_parity`` > 0).  Shared by the pipeline's
+    XorGroupModule and the post-compaction parity refresh — both must
+    produce the identical framing restart's reconstruct path expects."""
+    lengths = [len(s) for s in shards]
+    if rs_parity > 0:
+        parities = erasure.rs_encode(shards, rs_parity)
+        return fmt.serialize_shard(
+            [fmt.Region(f"parity{j}", np.frombuffer(p, np.uint8))
+             for j, p in enumerate(parities)],
+            {"members": members, "lengths": lengths, "rs": rs_parity})
+    parity = erasure.xor_encode(shards)
+    return fmt.serialize_shard(
+        [fmt.Region("parity0", np.frombuffer(parity, np.uint8))],
+        {"members": members, "lengths": lengths, "rs": 0})
+
+
 @register_module("xor")
 class XorGroupModule(Module):
     """L2b: XOR (or RS) erasure encoding across a group of ranks.  The group
@@ -305,28 +324,25 @@ class XorGroupModule(Module):
                 ctx.results["xor_status"] = f"group incomplete (rank {r})"
                 return "pass"
             shards.append(blob)
-        lengths = [len(s) for s in shards]
-        if self.rs_parity > 0:
-            parities = erasure.rs_encode(shards, self.rs_parity)
-            payload = fmt.serialize_shard(
-                [fmt.Region(f"parity{j}", np.frombuffer(p, np.uint8))
-                 for j, p in enumerate(parities)],
-                {"members": members, "lengths": lengths, "rs": self.rs_parity})
-        else:
-            parity = erasure.xor_encode(shards)
-            payload = fmt.serialize_shard(
-                [fmt.Region("parity0", np.frombuffer(parity, np.uint8))],
-                {"members": members, "lengths": lengths, "rs": 0})
+        payload = build_parity_payload(shards, members, self.rs_parity)
         # cross-group placement: a node never stores the parity that protects
-        # its own shard (erasure.parity_home); single group -> external tier.
+        # its own shard (erasure.parity_home); single group -> external tier,
+        # where it joins the version's aggregated segment when one is open.
         home = erasure.parity_home(gid, g, ctx.nranks)
+        pkey = fmt.parity_key(ctx.name, ctx.version, gid)
         try:
             if home < 0:
+                if ctx.cluster.aggregate_target() is not None and \
+                        ctx.cluster.stage_entry(ctx.name, ctx.version, pkey,
+                                                payload):
+                    ctx.results["l2_group"] = gid
+                    ctx.results["l2_parity_staged"] = True
+                    return "ok"
                 tier = pick_tier(ctx.cluster.external_tiers,
                                  need_persistent=True)
             else:
                 tier = pick_tier(ctx.cluster.node_tiers(home))
-            tier.put(fmt.parity_key(ctx.name, ctx.version, gid), payload)
+            tier.put(pkey, payload)
         except Exception as e:  # noqa: BLE001
             ctx.results["l2_xor_error"] = f"{type(e).__name__}: {e}"
             return "error"
@@ -338,7 +354,18 @@ class XorGroupModule(Module):
 class FlushModule(Module):
     """L3: chunked, rate-limited flush to an external persistent tier
     (parallel file system / DAOS stand-in).  Chunking bounds the
-    interference window; the backend's phase gate sits between chunks."""
+    interference window; the backend's phase gate sits between chunks.
+
+    When the cluster has an aggregating external tier, the shard is staged
+    into the version's WriteBatch instead of being put directly: the last
+    rank to stage seals every rank's shard + parity + manifests into ONE
+    sequential segment write, hiding the per-small-blob put overhead that
+    dominates once delta shards shrink.  Note the staged-but-not-yet-sealed
+    ranks report L3 "ok" at stage time — durability arrives with the seal,
+    whose failure surfaces on the sealing rank; the version's L3 data then
+    never becomes externally visible and restart falls back (an L1/L2
+    manifest that published before staging began may still advertise the
+    version as a node-local-level candidate)."""
 
     name = "l3-flush"
     priority = 40
@@ -347,29 +374,48 @@ class FlushModule(Module):
     def __init__(self, chunk_bytes: int = 4 << 20):
         self.chunk_bytes = chunk_bytes
 
+    def _paced_budget(self, ctx, nbytes: int):
+        """Charge ``nbytes`` to the cluster rate limiter in chunk-sized
+        acquires with phase-gate sleeps between them — bounding the
+        interference window whether the bytes then go out as a direct put
+        or as part of a sealed segment."""
+        limiter = ctx.cluster.rate_limiter
+        gate = ctx.cluster.phase_gate
+        if nbytes <= self.chunk_bytes:
+            limiter.acquire(nbytes)
+            return
+        for off in range(0, nbytes, self.chunk_bytes):
+            limiter.acquire(min(self.chunk_bytes, nbytes - off))
+            if gate is not None:
+                w = gate()
+                if w > 0:
+                    time.sleep(min(w, 0.5))
+
     def process(self, ctx):
+        target = ctx.cluster.aggregate_target()
+        if target is not None:
+            self._paced_budget(ctx, len(ctx.shard))
+            try:
+                sealed = ctx.cluster.stage_l3(
+                    ctx.name, ctx.version, ctx.rank, ctx.shard, ctx.digest,
+                    meta=ctx.meta)
+            except Exception as e:  # noqa: BLE001 — seal put failed
+                ctx.results["l3_error"] = f"{type(e).__name__}: {e}"
+                return "error"
+            ctx.results["l3_tier"] = target.info.name
+            ctx.results["l3_aggregated"] = True
+            ctx.results["l3_sealed"] = sealed
+            return "ok"
         tier = pick_tier(ctx.cluster.external_tiers,
                          need_persistent=True, need_survives_node=True)
         key = fmt.shard_key(ctx.name, ctx.version, ctx.rank)
-        limiter = ctx.cluster.rate_limiter
-        gate = ctx.cluster.phase_gate
-        n = len(ctx.shard)
         try:
-            if n <= self.chunk_bytes:
-                limiter.acquire(n)
-                tier.put(key, ctx.shard)
-            else:
-                # chunked put: vendor stores with multipart upload would
-                # stream; our tier API is whole-object, so chunks accumulate
-                # then publish (still rate-limited per chunk so interference
-                # stays bounded).
-                for off in range(0, n, self.chunk_bytes):
-                    limiter.acquire(min(self.chunk_bytes, n - off))
-                    if gate is not None:
-                        w = gate()
-                        if w > 0:
-                            time.sleep(min(w, 0.5))
-                tier.put(key, ctx.shard)
+            # chunked put: vendor stores with multipart upload would
+            # stream; our tier API is whole-object, so chunks accumulate
+            # then publish (still rate-limited per chunk so interference
+            # stays bounded).
+            self._paced_budget(ctx, len(ctx.shard))
+            tier.put(key, ctx.shard)
         except Exception as e:  # noqa: BLE001
             ctx.results["l3_error"] = f"{type(e).__name__}: {e}"
             return "error"

@@ -124,6 +124,17 @@ class PipelineSpec:
     backend_workers: int = 2
     phase_predictor: str = "none"           # none | ema | gru
     keep_versions: int = 3                  # GC horizon (0 disables GC)
+    #: aggregated write path: stage every L3 blob of a version (shards,
+    #: parity, manifests) into one segment put on an opted-in external tier
+    aggregate: bool = False
+    #: delta-chain depth that triggers automatic compaction (0 = manual
+    #: ``client.compact()`` only)
+    compact_threshold: int = 0
+    #: run auto-compaction (and the follow-up parity refresh) in the
+    #: backend's maintenance lane instead of inline in checkpoint_end
+    compact_async: bool = False
+    #: min seconds between maintenance-lane task starts (rate limit)
+    maintenance_interval_s: float = 0.0
 
     def module_options(self, name: str) -> Optional[dict]:
         """Options of the first spec entry named ``name`` (None if absent)."""
@@ -166,5 +177,11 @@ class PipelineSpec:
                 raise ValueError(
                     'the "delta" module requires a lossless serialize '
                     'encoding (raw or zlib), not "q8"')
+        if self.aggregate and self.module_options("flush") is None:
+            # the flush stage seals the batch; without it staged entries
+            # (manifests, parity) would never reach stable storage.
+            raise ValueError(
+                'aggregate=True requires the "flush" module (the last '
+                "rank's flush seals the version's segment)")
         return Engine(self.build_modules(), backend,
                       blocking_cut=self.blocking_cut)

@@ -36,6 +36,19 @@ def _manifest_for(cluster, name, version) -> Optional[dict]:
     return None
 
 
+def _segment_hint(cluster, name: str, version: int) -> str:
+    """Per-candidate diagnostic suffix when the version's aggregated
+    segment was found torn or corrupt — the operator should see WHY a
+    version is being skipped, not just that it was."""
+    marker = f"/v{version:08d}/"
+    diags = [d for d in getattr(cluster, "segment_diagnostics", [])
+             if marker in d.get("key", "")]
+    if not diags:
+        return ""
+    return " (segment diagnostics: " + "; ".join(
+        f"{d['tier']}:{d['key']}: {d['error']}" for d in diags) + ")"
+
+
 def fetch_shard_any_level(cluster, name: str, version: int, rank: int,
                           *, distance: int = 1,
                           expected_digest: Optional[str] = None
@@ -117,7 +130,8 @@ def load_rank_regions(cluster, name: str, version: int, rank: int,
     blob = fetch_shard_any_level(cluster, name, version, rank,
                                  distance=distance, expected_digest=digest)
     if blob is None:
-        raise IOError(f"rank {rank} shard unrecoverable for v{version}")
+        raise IOError(f"rank {rank} shard unrecoverable for v{version}"
+                      + _segment_hint(cluster, name, version))
     reader = fmt.ShardReader(blob)
     delta_names = set(reader.delta_regions())
     if not delta_names:

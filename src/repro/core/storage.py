@@ -55,6 +55,10 @@ class TierInfo:
     gbps: float  # nominal bandwidth
     persistent: bool  # survives node failure
     node_local: bool  # dies with the node
+    #: opt-in to the aggregated write path: per-version small blobs are
+    #: coalesced into one segment put on this tier (high-latency external
+    #: stores benefit; DRAM/node-local tiers keep direct puts).
+    aggregate: bool = False
 
 
 class StorageTier:
@@ -64,6 +68,7 @@ class StorageTier:
         self.info = info
         self._lock = threading.Lock()
         self._inflight = 0  # concurrent writers (producer-consumer pressure)
+        self.put_calls = 0  # lifetime put count (small-write accounting)
 
     # -- accounting used by pick_tier ------------------------------------
     def busy(self) -> int:
@@ -72,6 +77,7 @@ class StorageTier:
     def _enter(self):
         with self._lock:
             self._inflight += 1
+            self.put_calls += 1
 
     def _exit(self):
         with self._lock:
@@ -127,8 +133,9 @@ class DRAMTier(StorageTier):
 
 class FileTier(StorageTier):
     def __init__(self, root: str, name="file", gbps=5.0, persistent=True,
-                 node_local=False):
-        super().__init__(TierInfo(name, "file", gbps, persistent, node_local))
+                 node_local=False, aggregate=False):
+        super().__init__(TierInfo(name, "file", gbps, persistent, node_local,
+                                  aggregate=aggregate))
         self.root = root
         os.makedirs(root, exist_ok=True)
 
@@ -169,64 +176,174 @@ class FileTier(StorageTier):
                 if f.startswith(safe) and not f.endswith(".tmp")]
 
 
-#: KV journal entry framing: magic + 24-hex-char digest + payload.  The
-#: digest makes torn/corrupted entries detectable on reload (they are
-#: skipped, not loaded — a poisoned value would defeat restart's fallback
-#: because the in-memory store is trusted).
+#: Legacy per-key KV journal framing (pre-log format): magic + 24-hex-char
+#: digest + payload, one file per key.  Still readable on load; folded into
+#: the snapshot at the next journal compaction.
 KV_JOURNAL_MAGIC = b"VKVJ1\x00"
 _KV_DIGEST_LEN = 24
+
+#: Files the log-structured journal owns inside its directory; anything
+#: else in there is a legacy per-key entry.
+_KV_LOG_FILE = "log"
+_KV_SNAPSHOT_FILE = "snapshot"
 
 
 class KVTier(StorageTier):
     """DAOS stand-in: optimized low-level put/get of key-value pairs, with an
-    optional write-through journal file for persistence across restarts.
+    optional journal directory for persistence across restarts.
 
-    Journal entries are fsynced before the atomic publish (unlike the
-    historical version, a crash cannot publish a torn entry) and framed with
-    a digest; entries that fail verification on reload are skipped."""
+    The journal is log-structured (the historical one-file-per-key layout
+    grew an unbounded directory and paid a create+fsync+rename per put):
+    puts and deletes append digest-framed records to a single ``log`` file
+    (fsync per append — a crash can tear at most the final record, and the
+    scanner detects it), and every ``compact_every`` records the store is
+    folded into a ``snapshot`` segment (repro.core.format segment framing,
+    atomic publish) and the log truncated.  Legacy per-key files are still
+    loaded and are absorbed into the snapshot at the first compaction.
+    Records that fail their digest on reload are skipped, never trusted —
+    a poisoned value would defeat restart's fallback."""
 
-    def __init__(self, name="kv", gbps=20.0, journal: Optional[str] = None):
+    def __init__(self, name="kv", gbps=20.0, journal: Optional[str] = None,
+                 compact_every: int = 512, aggregate: bool = False):
         super().__init__(TierInfo(name, "kv", gbps, persistent=journal is not None,
-                                  node_local=False))
+                                  node_local=False, aggregate=aggregate))
         self._store: dict[str, bytes] = {}
         self._journal = journal
+        self._compact_every = compact_every
+        self._log_records = 0  # appended since the last snapshot
+        self._log_f = None
+        self._journal_lock = threading.Lock()  # append/compact serialization
         self.journal_skipped: list[str] = []  # corrupted entries on reload
         if journal and os.path.isdir(journal):
-            from repro.kernels import ops as kops
+            self._load_journal()
 
-            for f in os.listdir(journal):
-                if f.endswith(".tmp"):
-                    continue
-                with open(os.path.join(journal, f), "rb") as fh:
-                    blob = fh.read()
-                key = unescape_key(f)
-                if not blob.startswith(KV_JOURNAL_MAGIC):
-                    self.journal_skipped.append(key)
-                    continue
-                head = len(KV_JOURNAL_MAGIC)
-                want = blob[head:head + _KV_DIGEST_LEN].decode("ascii", "replace")
-                data = blob[head + _KV_DIGEST_LEN:]
-                if kops.digest(data) != want:
-                    self.journal_skipped.append(key)
-                    continue
-                self._store[key] = data
+    # -- journal persistence ---------------------------------------------
+    def _load_journal(self):
+        from repro.core import format as fmt
+        from repro.kernels import ops as kops
 
+        j = self._journal
+        # legacy per-key entries FIRST: they predate the log format, so the
+        # snapshot/log must override them (a legacy file that survives a
+        # crash mid-compaction must not resurrect its stale value).
+        for f in os.listdir(j):
+            if f in (_KV_LOG_FILE, _KV_SNAPSHOT_FILE) or f.endswith(".tmp"):
+                continue
+            with open(os.path.join(j, f), "rb") as fh:
+                blob = fh.read()
+            key = unescape_key(f)
+            if not blob.startswith(KV_JOURNAL_MAGIC):
+                self.journal_skipped.append(key)
+                continue
+            head = len(KV_JOURNAL_MAGIC)
+            want = blob[head:head + _KV_DIGEST_LEN].decode("ascii", "replace")
+            data = blob[head + _KV_DIGEST_LEN:]
+            if kops.digest(data) != want:
+                self.journal_skipped.append(key)
+                continue
+            self._store[key] = data
+        snap = os.path.join(j, _KV_SNAPSHOT_FILE)
+        if os.path.exists(snap):
+            with open(snap, "rb") as fh:
+                blob = fh.read()
+            try:
+                reader = fmt.SegmentReader(blob)
+            except Exception as e:  # noqa: BLE001 — torn snapshot: the log
+                # (and any legacy files) still carry every live record.
+                self.journal_skipped.append(f"<snapshot: {e}>")
+            else:
+                for k in reader.names():
+                    try:
+                        self._store[k] = reader.read(k)
+                    except IOError:
+                        self.journal_skipped.append(k)
+        log = os.path.join(j, _KV_LOG_FILE)
+        if os.path.exists(log):
+            with open(log, "rb") as fh:
+                blob = fh.read()
+            records, skipped = fmt.scan_log_records(blob)
+            for key, data in records:  # replay in append order
+                if data is None:
+                    self._store.pop(key, None)
+                else:
+                    self._store[key] = data
+            self.journal_skipped.extend(skipped)
+            self._log_records = len(records) + len(skipped)
+            if any(s.startswith(("<torn", "<corrupt")) for s in skipped):
+                # bad frame bytes must not stay in the file: a torn tail
+                # would swallow every FUTURE append (the scanner stops
+                # there), and resynced garbage would be re-skipped on every
+                # reload — rewrite the log from the surviving records.
+                tmp = log + ".tmp"
+                with open(tmp, "wb") as fh:
+                    for key, data in records:
+                        fh.write(fmt.encode_log_record(key, data))
+                    fh.flush()
+                    os.fsync(fh.fileno())
+                os.replace(tmp, log)
+                self._log_records = len(records)
+
+    def _append_record(self, key: str, data: Optional[bytes]):
+        from repro.core import format as fmt
+
+        with self._journal_lock:
+            os.makedirs(self._journal, exist_ok=True)
+            if self._log_f is None:
+                self._log_f = open(
+                    os.path.join(self._journal, _KV_LOG_FILE), "ab")
+            self._log_f.write(fmt.encode_log_record(key, data))
+            self._log_f.flush()
+            os.fsync(self._log_f.fileno())
+            self._log_records += 1
+            want_compact = self._compact_every and \
+                self._log_records >= self._compact_every
+        if want_compact:
+            self.compact_journal()
+
+    def compact_journal(self):
+        """Fold the journal into a fresh snapshot segment and truncate the
+        log.  Crash-safe: the snapshot publishes atomically, and replaying a
+        stale log over it is idempotent (the snapshot already reflects every
+        record in it)."""
+        from repro.core import format as fmt
+
+        if not self._journal:
+            return
+        with self._journal_lock:
+            os.makedirs(self._journal, exist_ok=True)
+            snap = os.path.join(self._journal, _KV_SNAPSHOT_FILE)
+            blob = fmt.encode_segment(dict(self._store),
+                                      meta={"kind": "kv-journal"})
+            with open(snap + ".tmp", "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(snap + ".tmp", snap)  # atomic publish
+            # absorb legacy per-key files BEFORE truncating the log: if we
+            # crash in between, the log (with any tombstones for legacy
+            # keys) still replays over the snapshot — removing them after
+            # the truncate could resurrect a deleted legacy key.
+            for f in os.listdir(self._journal):
+                if f in (_KV_LOG_FILE, _KV_SNAPSHOT_FILE) or \
+                        f.endswith(".tmp"):
+                    continue
+                try:
+                    os.remove(os.path.join(self._journal, f))
+                except FileNotFoundError:
+                    pass
+            if self._log_f is not None:
+                self._log_f.close()
+                self._log_f = None
+            open(os.path.join(self._journal, _KV_LOG_FILE), "wb").close()
+            self._log_records = 0
+
+    # -- API --------------------------------------------------------------
     def put(self, key, data):
         self._enter()
         try:
             self._store[key] = bytes(data)
             if self._journal:
-                from repro.kernels import ops as kops
-
-                os.makedirs(self._journal, exist_ok=True)
-                p = os.path.join(self._journal, escape_key(key))
-                with open(p + ".tmp", "wb") as f:
-                    f.write(KV_JOURNAL_MAGIC)
-                    f.write(kops.digest(data).encode("ascii"))
-                    f.write(data)
-                    f.flush()
-                    os.fsync(f.fileno())
-                os.replace(p + ".tmp", p)  # atomic publish
+                self._append_record(key, self._store[key])
         finally:
             self._exit()
 
@@ -237,12 +354,9 @@ class KVTier(StorageTier):
         return key in self._store
 
     def delete(self, key):
-        self._store.pop(key, None)
-        if self._journal:
-            try:
-                os.remove(os.path.join(self._journal, escape_key(key)))
-            except FileNotFoundError:
-                pass
+        existed = self._store.pop(key, None) is not None
+        if self._journal and existed:
+            self._append_record(key, None)  # tombstone
 
     def keys(self, prefix=""):
         return [k for k in self._store if k.startswith(prefix)]
@@ -268,6 +382,8 @@ class TierSpec:
     gbps: float = 1.0
     persistent: bool = True
     node_local: bool = False
+    #: opt this tier into the aggregated write path (see TierInfo.aggregate)
+    aggregate: bool = False
     options: dict = field(default_factory=dict)
 
     def resolved_name(self, rank: Optional[int] = None) -> str:
@@ -336,7 +452,7 @@ def _build_file(spec: TierSpec, *, scratch: str, rank: Optional[int] = None):
     sub = sub.format(rank="" if rank is None else rank)
     return FileTier(os.path.join(scratch, sub), name=spec.resolved_name(rank),
                     gbps=spec.gbps, persistent=spec.persistent,
-                    node_local=spec.node_local)
+                    node_local=spec.node_local, aggregate=spec.aggregate)
 
 
 @register_tier("kv")
@@ -346,7 +462,8 @@ def _build_kv(spec: TierSpec, *, scratch: str, rank: Optional[int] = None):
         journal = os.path.join(
             scratch, journal.format(rank="" if rank is None else rank))
     return KVTier(name=spec.resolved_name(rank), gbps=spec.gbps,
-                  journal=journal)
+                  journal=journal, aggregate=spec.aggregate,
+                  compact_every=spec.options.get("compact_every", 512))
 
 
 def default_node_specs() -> list[TierSpec]:
@@ -379,6 +496,31 @@ class TierTopology:
 
     def build_external(self) -> list[StorageTier]:
         return [TIERS.create(s, scratch=self.scratch) for s in self.external]
+
+
+class WriteBatch:
+    """Staged entries for one version's aggregated segment put.
+
+    FlushModule, XorGroupModule and the manifest publishers stage their
+    blobs here instead of issuing per-blob puts; the last rank to stage its
+    L3 shard seals the batch into a single sequential segment write
+    (repro.core.format.encode_segment).  Mutated only under the cluster
+    lock."""
+
+    def __init__(self, name: str, version: int):
+        self.name = name
+        self.version = version
+        self.entries: dict[str, bytes] = {}
+
+    def stage(self, key: str, data: bytes):
+        self.entries[key] = bytes(data)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(b) for b in self.entries.values())
 
 
 def pick_tier(tiers: list[StorageTier], *, need_persistent=False,

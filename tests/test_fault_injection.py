@@ -254,6 +254,53 @@ def test_total_write_failure_does_not_poison_chain(tmp_path):
     assert regs["w"].tobytes() == w4.tobytes()
 
 
+@pytest.mark.parametrize("wipe", ["dram", "ssd", "pfs"])
+def test_aggregated_delta_chain_survives_single_tier_loss(tmp_path, wipe):
+    """The tier-loss matrix through the aggregated (segment) flush path:
+    losing any single tier — including the external tier holding every
+    segment — leaves the chain restorable from the survivors."""
+    nranks = 2
+    cfg, cluster, clients, states = _delta_chain(tmp_path, nranks=nranks,
+                                                 aggregate=True)
+    if wipe == "dram":
+        for r in range(nranks):
+            cluster.node_tiers(r)[0].wipe()
+    elif wipe == "ssd":
+        for r in range(nranks):
+            cluster.node_tiers(r)[1].wipe()
+    else:
+        cluster.external_tiers[0].wipe()
+    for r in range(nranks):
+        regs = rst.load_rank_regions(cluster, cfg.name, 4, r)
+        assert regs["w"].tobytes() == states[(4, r)].tobytes(), (wipe, r)
+
+
+def test_aggregated_flush_flaky_put_falls_back(tmp_path):
+    """Seal puts fail for v3 and v4 (FlakyTier): the aggregated versions
+    never become externally visible; after total node loss restart falls
+    back to the last sealed version."""
+    from repro.core.api import VelocClient as _VC
+
+    cfg, cluster, clients, states = _delta_chain(tmp_path, nranks=2,
+                                                 versions=2, aggregate=True)
+    wrap_external_tiers(cluster, lambda t: FlakyTier(t, fail_puts=True,
+                                                     match="segment"))
+    rng = np.random.default_rng(99)
+    for v in (3, 4):
+        for r, c in enumerate(clients):
+            w = states[(v - 1, r)].copy()
+            w[:1000] += rng.standard_normal(1000).astype(np.float32)
+            states[(v, r)] = w
+            c.checkpoint({"w": w}, version=v, device_snapshot=False)
+    fresh = Cluster(cfg, nranks=2)
+    for r in range(2):
+        client = _VC(cfg, fresh, rank=r)
+        v, state = client.restart_latest(
+            {"w": np.zeros(100_000, np.float32)})
+        assert v == 2, (r, v)
+        assert np.asarray(state["w"]).tobytes() == states[(2, r)].tobytes()
+
+
 def test_flaky_journal_kv_restart(tmp_path):
     """KVTier journal: a corrupted entry is detected by its digest and
     skipped on reload instead of poisoning restart."""
