@@ -22,6 +22,10 @@ scale with the scaling factor stated in the ``derived`` column.
                   ranks x 8 regions, ~1% dirty) coalesced into one segment
                   put per version — L3 puts/version and flush wall time,
                   aggregated vs direct.
+  bench_packing   cross-version segment packing: consecutive delta versions
+                  of a stream coalesced into one rolling segment put
+                  (pack_versions=4) — L3 puts/version vs the per-version
+                  segment store.
   bench_scale     modeled weak-scaling of the L3 flush under shared-PFS
                   bandwidth (flush contention), from the storage model.
 
@@ -335,6 +339,61 @@ def bench_aggregation():
         f"speedup={d_t / max(a_t, 1e-9):.2f}x")
 
 
+def bench_packing():
+    """Cross-version segment packing: with high-frequency delta
+    checkpoints even ONE aggregated put per version leaves the external
+    tier dominated by per-put latency.  ``pack_versions=N`` coalesces N
+    consecutive delta versions of the stream into one rolling segment put
+    (8 ranks, ~1% dirty per step); reports L3 puts per version, packed vs
+    the per-version segment store."""
+    from repro.core import Cluster, VelocClient, VelocConfig
+
+    nranks = 8
+    n = (128 << 10) // 4  # 128 KiB of f32 per rank
+    rng = np.random.default_rng(0)
+    base = [rng.standard_normal(n).astype(np.float32) + r
+            for r in range(nranks)]
+    dirty = max(1, n // 100)
+    versions = range(2, 14)  # 12 high-frequency delta versions after v1
+
+    def run(pack):
+        root = f"/tmp/veloc_bench_pack_{pack}"
+        shutil.rmtree(root, ignore_errors=True)
+        cfg = VelocConfig(scratch=root, mode="sync", delta=True,
+                          delta_chunk_bytes=16 * 1024, delta_max_chain=16,
+                          partner=False, xor_group=4, flush=True,
+                          keep_versions=50, aggregate=True,
+                          pack_versions=pack)
+        cluster = Cluster(cfg, nranks=nranks)
+        clients = [VelocClient(cfg, cluster, rank=r) for r in range(nranks)]
+        state = [w.copy() for w in base]
+        for r, c in enumerate(clients):  # v1: full shards, sealed per-version
+            c.checkpoint({"w": state[r]}, version=1, device_snapshot=False)
+        puts0 = sum(t.put_calls for t in cluster.external_tiers)
+        t0 = time.perf_counter()
+        for v in versions:
+            for r, c in enumerate(clients):
+                w = state[r].copy()
+                lo = (v * 9973 + r * 131) % (n - dirty)
+                w[lo:lo + dirty] += 1.0
+                state[r] = w
+                c.checkpoint({"w": w}, version=v, device_snapshot=False)
+        dt = (time.perf_counter() - t0) / len(versions)
+        puts = (sum(t.put_calls for t in cluster.external_tiers) - puts0) \
+            / len(versions)
+        for c in clients:
+            c.shutdown()  # seals any open rolling pack
+        return puts, dt
+
+    s_puts, s_t = run(0)   # PR 3 per-version segment store
+    p_puts, p_t = run(4)   # 4 delta versions per rolling segment
+    row("packing_off_flush", s_t * 1e6, f"{s_puts:.2f}l3_puts_per_version")
+    row("packing_on_flush", p_t * 1e6,
+        f"{p_puts:.2f}l3_puts_per_version,"
+        f"put_reduction={s_puts / max(p_puts, 1e-9):.1f}x,"
+        f"speedup={s_t / max(p_t, 1e-9):.2f}x")
+
+
 def bench_scale():
     """Weak-scaling model of the L3 flush: N nodes share the PFS; per-node
     flush time grows linearly while L1+L2 stay flat — the paper's core
@@ -353,8 +412,8 @@ def bench_scale():
 
 
 ALL_BENCHES = (bench_levels, bench_engine, bench_erasure, bench_capture,
-               bench_async, bench_delta, bench_aggregation, bench_interval,
-               bench_scale)
+               bench_async, bench_delta, bench_aggregation, bench_packing,
+               bench_interval, bench_scale)
 
 
 def main(argv=None) -> None:
@@ -369,11 +428,18 @@ def main(argv=None) -> None:
     benches = ALL_BENCHES
     if args.only:
         pats = [s.strip() for s in args.only.split(",") if s.strip()]
+        # every pattern must select something: a typo'd name silently
+        # running zero benchmarks (and exiting 0 with no BENCH JSON) is a
+        # CI trap — fail loudly and list what IS available.
+        unknown = [p for p in pats
+                   if not any(p in f.__name__ for f in ALL_BENCHES)]
+        if unknown:
+            ap.error(
+                f"--only pattern(s) {', '.join(map(repr, unknown))} match "
+                f"no benchmark; valid names: "
+                f"{', '.join(f.__name__ for f in ALL_BENCHES)}")
         benches = [f for f in ALL_BENCHES
                    if any(p in f.__name__ for p in pats)]
-        if not benches:
-            ap.error(f"--only {args.only!r} matches no benchmark "
-                     f"({', '.join(f.__name__ for f in ALL_BENCHES)})")
     t0 = time.time()
     print("name,us_per_call,derived")
     for fn in benches:

@@ -24,6 +24,7 @@ the external flush all run in the ActiveBackend.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from dataclasses import dataclass
@@ -36,9 +37,12 @@ from repro.core.future import CheckpointFuture
 from repro.core.modules import CheckpointContext
 from repro.core.phases import EMAPhasePredictor, GRUPhasePredictor
 from repro.core.pipeline import ModuleSpec, PipelineSpec
-from repro.core.storage import (StorageTier, TierSpec, TierTopology,
-                                WriteBatch, default_external_specs,
-                                default_node_specs, pick_tier)
+from repro.core.storage import (RollingBatch, StorageTier, TierSpec,
+                                TierTopology, WriteBatch,
+                                default_external_specs, default_node_specs,
+                                pick_tier)
+
+_log = logging.getLogger("repro.veloc")
 
 
 @dataclass
@@ -63,6 +67,11 @@ class VelocConfig:
     delta_chunk_bytes: int = 64 * 1024  # dirty-detection granularity
     delta_max_chain: int = 8            # deltas before a forced full shard
     aggregate: bool = False             # coalesce L3 blobs into one segment
+    pack_versions: int = 0              # >=2: pack that many consecutive
+    #                                     delta versions into one rolling
+    #                                     segment put (requires aggregate)
+    seal_retries: int = 2               # maintenance-lane re-seal attempts
+    #                                     after a failed segment/pack put
     compact_threshold: int = 0          # deltas before auto-compaction (0=off)
     compact_async: bool = False         # auto-compact in the maintenance lane
     partner: bool = True
@@ -113,6 +122,7 @@ class VelocConfig:
                             phase_predictor=self.phase_predictor,
                             keep_versions=self.keep_versions,
                             aggregate=self.aggregate,
+                            seal_retries=self.seal_retries,
                             compact_threshold=self.compact_threshold,
                             compact_async=self.compact_async)
 
@@ -121,6 +131,11 @@ class VelocConfig:
         (the default DRAM + node-local SSD + shared PFS, optionally + KV).
         ``aggregate=True`` opts every external tier into the segment write
         path (node-local tiers keep direct puts)."""
+        if self.pack_versions >= 2 and not self.aggregate:
+            # silently producing zero packs would defeat the knob's point
+            raise ValueError(
+                "pack_versions requires aggregate=True (rolling packs ride "
+                "the aggregated segment write path)")
         external = default_external_specs()
         if self.use_kv_external:
             external.append(TierSpec("kv", name="kv", gbps=2.0,
@@ -128,6 +143,7 @@ class VelocConfig:
         if self.aggregate:
             for s in external:
                 s.aggregate = True
+                s.pack_versions = self.pack_versions
         return TierTopology(scratch=self.scratch, node=default_node_specs(),
                             external=external)
 
@@ -186,7 +202,23 @@ class Cluster:
         self._batches: dict[tuple, WriteBatch] = {}  # (name, version) open
         self._sealed: dict[tuple, str] = {}  # (name, version) -> tier name
         self._seal_errors: dict[tuple, str] = {}
+        #: name -> open cross-version rolling pack (delta versions batching
+        #: toward one pack put; see TierInfo.pack_versions)
+        self._rolling: dict[str, RollingBatch] = {}
+        #: (name, version) -> pack key of the sealed rolling segment the
+        #: version's L3 entries live in (also memoized from disk scans)
+        self._packed: dict[tuple, str] = {}
+        #: (tier name, stream name) pairs whose pack keys were already
+        #: scanned from disk (negative cache for _pack_skey_for)
+        self._pack_scanned: set = set()
+        #: segment/pack key -> retained failed-seal state (entries + attempt
+        #: count) for the bounded maintenance-lane re-seal.  Kept OUT of
+        #: ``_batches`` so later manifest/compaction writes publish directly
+        #: instead of silently staging into a dead batch.
+        self._seal_retry: dict[str, dict] = {}
         self._vlocks: dict[tuple, threading.Lock] = {}  # per-version rewrite
+        self._plocks: dict[str, threading.Lock] = {}  # per-pack rewrite
+        self._plock_guard = threading.Lock()
         self._seg_lock = threading.Lock()
         self._segcache: dict[tuple, fmt.SegmentReader] = {}
         #: torn / corrupt segments observed while reading (restart surfaces
@@ -279,13 +311,93 @@ class Cluster:
                                    e)
             return None
 
+    # -- rolling packs (cross-version segments) --------------------------
+    def _pack_reader(self, tier: StorageTier, name: str, skey: str
+                     ) -> Optional[fmt.PackReader]:
+        """Cached index over one rolling pack, memoizing which versions it
+        carries (so a fresh process resolves pack membership once per
+        blob).  Torn packs parse to None with a diagnostic."""
+        ck = (tier.info.name, skey)
+        with self._seg_lock:
+            reader = self._segcache.get(ck)
+        if isinstance(reader, fmt.PackReader):
+            return reader
+        blob = self._tier_get(tier, skey)
+        if blob is None:
+            return None
+        try:
+            reader = fmt.PackReader(blob)
+        except Exception as e:  # noqa: BLE001 — torn pack
+            self._diagnose_segment(tier.info.name, skey, e)
+            return None
+        self._cache_segment(tier.info.name, skey, reader)
+        with self._lock:
+            for v in reader.versions:
+                self._packed.setdefault((name, v), skey)
+        return reader
+
+    def _pack_skey_for(self, tier: StorageTier, name: str, version: int
+                       ) -> Optional[str]:
+        """The pack key holding ``version``'s entries: from the in-memory
+        index when this process sealed it, else discovered (and memoized)
+        by scanning the tier's pack keys — how a fresh process finds packed
+        versions.  The scan runs at most once per (tier, stream): every
+        pack this process seals later lands in ``_packed`` directly, so a
+        version absent after one scan stays absent (a torn pack's members
+        read as unpacked either way — the per-blob diagnostic covers it)."""
+        with self._lock:
+            skey = self._packed.get((name, version))
+            if skey is not None:
+                return skey
+            if (tier.info.name, name) in self._pack_scanned:
+                return None
+        try:
+            keys = tier.keys(fmt.pack_prefix(name))
+        except Exception:  # noqa: BLE001 — flaky tier reads as no packs
+            return None    # (and stays unscanned, so it is probed again)
+        complete = True
+        for key in sorted(keys):
+            if self._pack_reader(tier, name, key) is not None:
+                continue  # parsed + memoized
+            with self._seg_lock:
+                torn = any(t == tier.info.name and k == key
+                           for (t, k, _e) in self._seg_diagnosed)
+            if not torn:
+                # TRANSIENT read failure (flaky get), not deterministic
+                # corruption: don't cache this scan as complete, or the
+                # pack's members would read as absent for the whole process
+                complete = False
+        with self._lock:
+            if complete:
+                self._pack_scanned.add((tier.info.name, name))
+            return self._packed.get((name, version))
+
+    def _pack_entry(self, tier: StorageTier, name: str, version: int,
+                    key: str) -> Optional[bytes]:
+        skey = self._pack_skey_for(tier, name, version)
+        if skey is None:
+            return None
+        reader = self._pack_reader(tier, name, skey)
+        if reader is None or key not in reader:
+            return None
+        try:
+            return reader.read(key)
+        except Exception as e:  # noqa: BLE001 — corrupt entry reads as miss
+            self._diagnose_segment(tier.info.name, skey + "#" + key, e)
+            return None
+
     def stage_l3(self, name: str, version: int, rank: int, shard: bytes,
                  digest: str, meta: Optional[dict] = None) -> bool:
         """Aggregated L3 write: stage this rank's shard into the version's
-        WriteBatch; the LAST rank to stage seals the batch — L3 manifest
-        included — into ONE segment put.  Returns True when this call
-        sealed; raises if the seal put fails (the caller records the L3
-        error and restart falls back)."""
+        WriteBatch; the LAST rank to stage closes the batch — L3 manifest
+        included.  A full version seals immediately into ONE per-version
+        segment put; with ``pack_versions >= 2`` on the target tier a
+        *delta* version is instead absorbed into the stream's open rolling
+        pack, which seals in one put once ``pack_versions`` members
+        accumulated (or at the next chain boundary).  Returns True when
+        this call performed a seal put; raises if a seal put fails (the
+        caller records the L3 error, the batch is retained for the bounded
+        maintenance-lane re-seal, and restart falls back meanwhile)."""
         with self._lock:
             batch = self._batches.setdefault(
                 (name, version), WriteBatch(name, version))
@@ -296,32 +408,81 @@ class Cluster:
                 self._note_meta_locked(name, version, meta)
             if len(reg) < self.nranks:
                 return False
-            tier, batch = self._prepare_seal_locked(name, version, reg)
-        # the seal put — the largest write in the system — runs OUTSIDE the
+            tier = self.aggregate_target()
+            if tier is None:  # tiers swapped out mid-flight
+                raise RuntimeError("no aggregating external tier to seal to")
+            batch = self._close_version_batch_locked(name, version, reg)
+            pv = int(getattr(tier.info, "pack_versions", 0) or 0)
+            is_delta = self._parents.get((name, version)) is not None
+            if pv >= 2 and is_delta:
+                rb = self._rolling.get(name)
+                if rb is None:
+                    rb = self._rolling[name] = RollingBatch(name, version)
+                rb.absorb(version, batch.entries)
+                if len(rb.versions) < pv:
+                    # pack still open: the version is L1/L2-protected only
+                    # until the pack boundary seals it (deferred-durability
+                    # window bounded by pack_versions)
+                    return False
+                jobs = self._prepare_pack_seal_locked(tier, name)
+            else:
+                self._sealed[(name, version)] = tier.info.name
+                jobs = [{"name": name, "skey": fmt.segment_key(name, version),
+                         "entries": dict(batch.entries),
+                         "versions": [version], "pack": False}]
+                # a full version is a chain boundary: flush the previous
+                # chain's open rolling pack too — its deltas must not wait
+                # on checkpoints that may never come
+                jobs += self._prepare_pack_seal_locked(tier, name)
+        # seal puts — the largest writes in the system — run OUTSIDE the
         # cluster lock so other ranks' staging/notes are never serialized
         # behind slow external I/O.
-        self._do_seal(tier, batch)
+        err_own: Optional[Exception] = None
+        for job in jobs:
+            try:
+                self._do_seal_io(tier, job)
+            except Exception as e:  # noqa: BLE001 — finish remaining jobs;
+                # each failure retains its own batch.  Only a failure of
+                # THIS version's job is raised (= this checkpoint's L3
+                # error); a failed chain-boundary pack of EARLIER versions
+                # must not misattribute an error to a version that is fully
+                # durable — its retained batch is surfaced via seal_errors
+                # and picked up by the caller's retry scheduling.
+                if version in job["versions"]:
+                    err_own = e
+        if err_own is not None:
+            raise err_own
         return True
 
     def stage_entry(self, name: str, version: int, key: str, data: bytes
                     ) -> bool:
         """Stage an auxiliary version blob (e.g. the erasure-group parity)
-        into the pending batch.  False once the version already sealed —
-        the caller falls back to a direct put."""
+        into the pending batch — or the stream's open rolling pack once the
+        version's own batch was absorbed there, or the retained failed-seal
+        batch (the re-seal carries it; opening a NEW batch here would
+        create a zombie no seal ever drains).  False once the version
+        already sealed — the caller falls back to a direct put."""
         with self._lock:
             if (name, version) in self._sealed:
                 return False
+            rb = self._rolling.get(name)
+            if rb is not None and rb.has(version):
+                rb.stage(key, data)
+                return True
+            found = self._find_seal_retry_locked(name, version)
+            if found is not None:
+                found[1]["entries"][key] = bytes(data)
+                return True
             batch = self._batches.setdefault(
                 (name, version), WriteBatch(name, version))
             batch.stage(key, data)
             return True
 
-    def _prepare_seal_locked(self, name: str, version: int,
-                             reg: dict[int, str]):
-        """Stage the L3 manifest, close the batch and optimistically mark
-        the version sealed (late ``stage_entry`` racers fall back to direct
-        puts during the in-flight put) — the actual I/O happens in
-        ``_do_seal`` outside the lock."""
+    def _close_version_batch_locked(self, name: str, version: int,
+                                    reg: dict[int, str]) -> WriteBatch:
+        """Pop the version's batch and stage its L3 manifest into it (the
+        manifest travels inside the segment/pack, so the version becomes
+        externally visible atomically at seal)."""
         batch = self._batches.pop((name, version))
         batch.stage(
             fmt.manifest_key(name, version) + ".L3",
@@ -330,32 +491,196 @@ class Cluster:
                               meta=self._meta.get((name, version), {}),
                               parent=self._parents.get((name, version)),
                               group_size=self.group_size))
-        tier = self.aggregate_target()
-        if tier is None:  # tiers swapped out mid-flight; nothing to seal to
-            self._batches[(name, version)] = batch
-            raise RuntimeError("no aggregating external tier to seal to")
-        self._sealed[(name, version)] = tier.info.name
-        return tier, batch
+        return batch
 
-    def _do_seal(self, tier: StorageTier, batch: WriteBatch):
-        name, version = batch.name, batch.version
-        seg = fmt.encode_segment(batch.entries,
-                                 meta={"name": name, "version": version,
-                                       "nranks": self.nranks})
-        skey = fmt.segment_key(name, version)
+    def _prepare_pack_seal_locked(self, tier: StorageTier, name: str
+                                  ) -> list[dict]:
+        """Close the stream's open rolling pack and optimistically mark its
+        member versions sealed (late ``stage_entry`` racers fall back to
+        direct puts during the in-flight put) — the actual I/O happens in
+        ``_do_seal_io`` outside the lock."""
+        rb = self._rolling.pop(name, None)
+        if rb is None or not rb.versions:
+            return []
+        skey = fmt.pack_key(name, rb.seq)
+        for v in rb.versions:
+            self._sealed[(name, v)] = tier.info.name
+            self._packed[(name, v)] = skey
+        return [{"name": name, "skey": skey, "entries": dict(rb.entries),
+                 "versions": sorted(rb.versions), "pack": True}]
+
+    def _seal_job_blob(self, job: dict) -> bytes:
+        """Encode one seal job's entries — rolling pack or per-version
+        segment framing (shared by the first seal and every re-seal)."""
+        if job["pack"]:
+            return fmt.encode_pack(job["name"], job["entries"],
+                                   job["versions"],
+                                   meta={"nranks": self.nranks})
+        return fmt.encode_segment(
+            job["entries"], meta={"name": job["name"],
+                                  "version": job["versions"][0],
+                                  "nranks": self.nranks})
+
+    def _cache_seal_job(self, tier: StorageTier, job: dict, seg: bytes):
+        self._cache_segment(
+            tier.info.name, job["skey"],
+            fmt.PackReader(seg) if job["pack"] else fmt.SegmentReader(seg))
+
+    def _do_seal_io(self, tier: StorageTier, job: dict):
+        name, versions = job["name"], job["versions"]
+        seg = self._seal_job_blob(job)
+        try:
+            tier.put(job["skey"], seg)
+        except Exception as e:  # noqa: BLE001 — the batch is RETAINED for
+            # the bounded maintenance-lane re-seal (``retry_seal``), keyed
+            # away from ``_batches`` so later compaction/manifest writes
+            # publish directly instead of silently staging into it.  The
+            # versions read as unsealed; restart falls back meanwhile.
+            with self._lock:
+                for v in versions:
+                    self._sealed.pop((name, v), None)
+                    self._packed.pop((name, v), None)
+                    self._seal_errors[(name, v)] = f"{type(e).__name__}: {e}"
+                self._seal_retry[job["skey"]] = {
+                    "name": name, "versions": list(versions),
+                    "entries": job["entries"], "pack": job["pack"],
+                    "attempts": 0, "scheduled": False}
+            raise
+        self._cache_seal_job(tier, job, seg)
+
+    # -- bounded seal retry ---------------------------------------------
+    def _find_seal_retry_locked(self, name: str, version: int
+                                ) -> Optional[tuple[str, dict]]:
+        for skey, item in self._seal_retry.items():
+            if item["name"] == name and version in item["versions"]:
+                return skey, item
+        return None
+
+    def seal_retry_pending(self, name: str) -> list[int]:
+        """Versions whose failed seal batch is retained awaiting a re-seal."""
+        with self._lock:
+            return sorted(v for item in self._seal_retry.values()
+                          if item["name"] == name for v in item["versions"])
+
+    def retry_seal(self, name: str, version: int) -> bool:
+        """One re-seal attempt for the retained batch holding ``version``.
+        Returns True when the batch is gone (this attempt sealed it, or it
+        was already sealed / GC'd), False when the put failed again."""
+        with self._lock:
+            found = self._find_seal_retry_locked(name, version)
+            if found is None:
+                return True
+            skey = found[0]
+        return self._retry_seal_key(skey)
+
+    def _retry_seal_key(self, skey: str) -> bool:
+        """Re-seal one retained batch by its segment/pack key."""
+        with self._lock:
+            item = self._seal_retry.get(skey)
+            if item is None:
+                return True
+            name = item["name"]
+            # count the attempt BEFORE any early-out: a cluster whose
+            # aggregating tier was swapped out must burn retry budget too,
+            # or the maintenance task would resubmit itself forever
+            item["attempts"] += 1
+            tier = self.aggregate_target()
+            if tier is None:
+                return False
+            # refresh complete manifests from the live registry: levels or
+            # digests republished since the failed seal (compaction, late
+            # L2 notes) must beat the stale staging-time blobs
+            for (n, v, level), reg in self._registry.items():
+                if n != name or v not in item["versions"] \
+                        or len(reg) != self.nranks:
+                    continue
+                item["entries"][fmt.manifest_key(n, v) + f".{level}"] = \
+                    fmt.make_manifest(
+                        n, v, self.nranks, level=level, shard_digests=reg,
+                        meta=self._meta.get((n, v), {}),
+                        parent=self._parents.get((n, v)),
+                        group_size=self.group_size)
+            job = {"name": name, "skey": skey,
+                   "entries": dict(item["entries"]),
+                   "versions": list(item["versions"]), "pack": item["pack"]}
+        # NOTE: a GC racing this put could at worst resurrect one orphan
+        # segment of already-retired versions — same exposure the in-flight
+        # seal itself has, accepted for lock-free seal I/O.
+        seg = self._seal_job_blob(job)
         try:
             tier.put(skey, seg)
-        except Exception as e:  # noqa: BLE001 — the batch is DROPPED, not
-            # restored: with no retry policy a kept-around dead batch would
-            # silently swallow later compaction/manifest writes for this
-            # version (they stage instead of hitting the tiers).  The
-            # version reads as unsealed; direct puts take over from here.
+        except Exception as e:  # noqa: BLE001 — still down; stays retained
             with self._lock:
-                self._sealed.pop((name, version), None)
-                self._seal_errors[(name, version)] = \
-                    f"{type(e).__name__}: {e}"
-            raise
-        self._cache_segment(tier.info.name, skey, fmt.SegmentReader(seg))
+                for v in job["versions"]:
+                    self._seal_errors[(name, v)] = f"{type(e).__name__}: {e}"
+            return False
+        with self._lock:
+            self._seal_retry.pop(skey, None)
+            for v in job["versions"]:
+                self._sealed[(name, v)] = tier.info.name
+                if job["pack"]:
+                    self._packed[(name, v)] = skey
+                self._seal_errors.pop((name, v), None)
+        self._cache_seal_job(tier, job, seg)
+        return True
+
+    def schedule_seal_retry(self, backend, name: str, retries: int) -> bool:
+        """Queue up to ``retries`` maintenance-lane re-seal attempts for
+        EVERY retained batch of stream ``name`` not already scheduled
+        (idle-gated and rate-limited like all maintenance).  Keyed on the
+        stream, not a version: the flush that observed the failure may
+        have been sealing its own version's segment, the chain-boundary
+        rolling pack of EARLIER versions, or both.  Deduplicated: one
+        scheduled chain per retained batch."""
+        targets = []
+        with self._lock:
+            for skey, item in self._seal_retry.items():
+                if item["name"] != name or item["scheduled"] \
+                        or item["attempts"] >= retries:
+                    continue
+                item["scheduled"] = True
+                targets.append((skey, max(item["versions"])))
+        kind = f"seal-retry:{name}"
+        for skey, ver in targets:
+            def attempt(skey=skey, ver=ver):
+                ok = self._retry_seal_key(skey)
+                resubmit = False
+                with self._lock:
+                    it = self._seal_retry.get(skey)
+                    if it is not None:
+                        it["scheduled"] = False
+                        if not ok and it["attempts"] < retries:
+                            it["scheduled"] = True
+                            resubmit = True
+                if resubmit:
+                    backend.submit_maintenance(kind, ver, attempt)
+
+            backend.submit_maintenance(kind, ver, attempt)
+        return bool(targets)
+
+    def flush_open_packs(self, name: Optional[str] = None) -> int:
+        """Seal any open rolling pack now (client shutdown, or an operator
+        bounding the L1/L2-only window of a quiescent stream).  Returns the
+        number of packs sealed; raises on a failed put (the batch is
+        retained for retry like any seal)."""
+        with self._lock:
+            tier = self.aggregate_target()
+            if tier is None:
+                return 0
+            jobs = []
+            for n in list(self._rolling):
+                if name is not None and n != name:
+                    continue
+                jobs += self._prepare_pack_seal_locked(tier, n)
+        err: Optional[Exception] = None
+        for job in jobs:
+            try:
+                self._do_seal_io(tier, job)
+            except Exception as e:  # noqa: BLE001
+                err = err or e
+        if err is not None:
+            raise err
+        return len(jobs)
 
     def _version_rewrite_lock_locked(self, name: str, version: int
                                      ) -> threading.Lock:
@@ -363,21 +688,37 @@ class Cluster:
         Segment read-modify-writes serialize on THIS lock and run with the
         global lock released — maintenance-lane compaction of one version
         must not stall every rank's staging/notes behind external I/O
-        (lock order: cluster lock -> version lock -> _seg_lock)."""
+        (lock order: cluster lock -> version lock -> pack lock ->
+        _seg_lock)."""
         return self._vlocks.setdefault((name, version), threading.Lock())
+
+    def _pack_lock(self, skey: str) -> threading.Lock:
+        """Per-pack rewrite lock: a rolling segment is shared by several
+        versions, so their rewrites (compaction, GC re-pack) serialize on
+        the PACK, not just the version.  Guarded by its own tiny lock (not
+        the cluster lock) so it is reachable from paths that already hold
+        the cluster lock."""
+        with self._plock_guard:
+            return self._plocks.setdefault(skey, threading.Lock())
 
     def _stage_into_batch_locked(self, name: str, version: int,
                                  repl: dict[str, bytes]) -> bool:
-        """Replace staged bytes while the version is still batching (the
-        seal must write current — e.g. compacted — blobs, not the stale
-        staging-time ones).  Cluster lock held; False when no batch is
-        open."""
+        """Replace staged bytes while the version is still batching — in
+        its own open WriteBatch, or in the stream's open rolling pack once
+        absorbed there (the seal must write current — e.g. compacted —
+        blobs, not the stale staging-time ones).  Cluster lock held; False
+        when neither is open."""
         batch = self._batches.get((name, version))
-        if batch is None:
-            return False
-        for key, blob in repl.items():
-            batch.stage(key, blob)
-        return True
+        if batch is not None:
+            for key, blob in repl.items():
+                batch.stage(key, blob)
+            return True
+        rb = self._rolling.get(name)
+        if rb is not None and rb.has(version):
+            for key, blob in repl.items():
+                rb.stage(key, blob)
+            return True
+        return False
 
     def _rewrite_segments_io(self, name: str, version: int,
                              repl: dict[str, bytes]) -> set:
@@ -410,32 +751,132 @@ class Cluster:
             out.add(tier.info.name)
         return out
 
+    def _pack_rmw(self, name: str, skey: str, transform, *,
+                  drop_torn: bool = False) -> set:
+        """Read-modify-write the rolling pack ``skey`` on every external
+        tier holding it, under the pack's rewrite lock (caller must NOT
+        hold it, nor the cluster lock).  ``transform(reader)`` returns the
+        new ``(entries, versions)`` — or None to delete the pack.  A torn
+        pack is skipped with a diagnostic, or deleted when ``drop_torn``
+        (GC re-pack: its members are already retired, nothing inside is
+        readable anyway).  Returns the tier names whose pack was
+        rewritten."""
+        out: set = set()
+        with self._pack_lock(skey):
+            for tier in self.external_tiers:
+                blob = self._tier_get(tier, skey)
+                if blob is None:
+                    continue
+                try:
+                    reader = fmt.PackReader(blob)
+                except Exception as e:  # noqa: BLE001
+                    self._diagnose_segment(tier.info.name, skey, e)
+                    if drop_torn:
+                        tier.delete(skey)
+                        with self._seg_lock:
+                            self._segcache.pop((tier.info.name, skey), None)
+                    continue
+                res = transform(reader)
+                if res is None:
+                    tier.delete(skey)
+                    with self._seg_lock:
+                        self._segcache.pop((tier.info.name, skey), None)
+                    continue
+                entries, versions = res
+                seg = fmt.encode_pack(name, entries, versions,
+                                      meta={"nranks":
+                                            reader.meta.get("nranks",
+                                                            self.nranks)})
+                tier.put(skey, seg)
+                self._cache_segment(tier.info.name, skey,
+                                    fmt.PackReader(seg))
+                out.add(tier.info.name)
+        return out
+
+    def _rewrite_pack_io(self, name: str, skey: str, repl: dict[str, bytes]
+                         ) -> set:
+        """Replace entries inside the rolling pack ``skey`` (atomic per
+        tier); returns the tier names whose pack was rewritten."""
+
+        def transform(reader):
+            entries = {n: reader.read(n, verify=False)
+                       for n in reader.names()}
+            entries.update(repl)
+            return entries, reader.versions
+
+        return self._pack_rmw(name, skey, transform)
+
     def rewrite_entries(self, name: str, version: int,
                         repl: dict[str, bytes]) -> set:
-        """Public segment rewrite hook (compaction, parity refresh)."""
+        """Public segment rewrite hook (compaction, parity refresh):
+        routes through the open batch / rolling pack, a retained
+        failed-seal batch, the sealed per-version segment, or the sealed
+        rolling pack — whichever currently owns the version's L3 bytes."""
         with self._lock:
             if self._stage_into_batch_locked(name, version, repl):
                 return {"(pending-batch)"}
+            found = self._find_seal_retry_locked(name, version)
+            if found is not None:
+                # the re-seal must publish current (e.g. compacted) bytes
+                _, item = found
+                for key, blob in repl.items():
+                    item["entries"][key] = bytes(blob)
+                return {"(seal-retry)"}
             vlock = self._version_rewrite_lock_locked(name, version)
+        out: set = set()
         with vlock:
-            return self._rewrite_segments_io(name, version, repl)
+            out |= self._rewrite_segments_io(name, version, repl)
+        pack_keys = {sk for sk in
+                     (self._pack_skey_for(t, name, version)
+                      for t in self.external_tiers) if sk is not None}
+        for skey in pack_keys:
+            out |= self._rewrite_pack_io(name, skey, repl)
+        return out
 
-    def _publish_many_locked(self, name: str, version: int,
-                             pubs: dict[str, bytes], *,
-                             probe_segments: bool = True):
-        """Write version artifacts (manifests) to the external tiers —
-        staged into the still-open batch when the version is batching,
-        inside the sealed segment where one exists, direct puts elsewhere.
-        ``probe_segments=False`` skips the per-tier segment lookup for
-        versions that cannot have one (the direct write path)."""
-        if not pubs:
-            return
+    def _stage_pubs_locked(self, name: str, version: int,
+                           pubs: dict[str, bytes]) -> str:
+        """Route version artifacts (manifests) while holding the cluster
+        lock.  Returns how the caller must finish OUTSIDE the lock:
+
+          "staged"   — landed in the open batch / rolling pack; done.
+          "retained" — copied into a retained failed-seal batch (the
+                       re-seal will carry them); direct puts are STILL
+                       needed so healthy tiers — and a fresh process — see
+                       the manifest now, not only after a successful
+                       re-seal.
+          "publish"  — not batching anywhere; publish via _publish_many.
+        """
         if self._stage_into_batch_locked(name, version, pubs):
+            return "staged"
+        found = self._find_seal_retry_locked(name, version)
+        if found is not None:
+            _, item = found
+            for key, blob in pubs.items():
+                item["entries"][key] = bytes(blob)
+            return "retained"
+        return "publish"
+
+    def _publish_many(self, name: str, version: int,
+                      pubs: dict[str, bytes], *,
+                      probe_segments: bool = True):
+        """Tier I/O half of a manifest publish — call WITHOUT the cluster
+        lock (segment/pack read-modify-writes serialize on the version and
+        pack rewrite locks; holding the global lock across external I/O
+        would stall every rank's staging).  Writes inside the sealed
+        segment or pack where one exists, direct puts elsewhere.
+        ``probe_segments=False`` skips the per-tier lookups for versions
+        that cannot have one (the direct write path, retained batches)."""
+        if not pubs:
             return
         seg_tiers: set = set()
         if probe_segments:
-            with self._version_rewrite_lock_locked(name, version):
+            with self._lock:
+                vlock = self._version_rewrite_lock_locked(name, version)
+                skey = self._packed.get((name, version))
+            with vlock:
                 seg_tiers = self._rewrite_segments_io(name, version, pubs)
+            if skey is not None:
+                seg_tiers |= self._rewrite_pack_io(name, skey, pubs)
         for tier in self.external_tiers:
             if tier.info.name in seg_tiers:
                 continue
@@ -458,6 +899,8 @@ class Cluster:
             blob = self._tier_get(tier, key)
             if blob is None:
                 blob = self._segment_entry(tier, name, version, key)
+            if blob is None:
+                blob = self._pack_entry(tier, name, version, key)
             if blob is not None:
                 return blob
         return None
@@ -489,15 +932,20 @@ class Cluster:
             blob = self._tier_get(tier, key)
             if blob is None:
                 blob = self._segment_entry(tier, name, version, key)
+            if blob is None:
+                blob = self._pack_entry(tier, name, version, key)
             if blob is not None:
                 return blob
         return None
 
     def note_shard(self, name, version, level, rank, digest, meta=None):
         """Collective commit: last rank to report publishes the manifest.
-        While the version's aggregated batch is open the manifest is staged
-        there (it travels in the segment's single put); otherwise it is
-        written directly — through the sealed segment when one exists."""
+        While the version's aggregated batch / rolling pack is open the
+        manifest is staged there (it travels in the single seal put);
+        otherwise it is written outside the cluster lock — through the
+        sealed segment or pack when one exists."""
+        pubs = None
+        probe = False
         with self._lock:
             k = (name, version, level)
             reg = self._registry.setdefault(k, {})
@@ -511,12 +959,17 @@ class Cluster:
                     parent=self._parents.get((name, version)),
                     group_size=self.group_size)
                 key = fmt.manifest_key(name, version) + f".{level}"
-                self._publish_many_locked(
-                    name, version, {key: blob},
+                mode = self._stage_pubs_locked(name, version, {key: blob})
+                if mode != "staged":
+                    pubs = {key: blob}
                     # a version this process writes through the direct path
-                    # cannot have a segment — skip the per-tier probes
-                    probe_segments=bool(self.aggregate)
-                    or (name, version) in self._sealed)
+                    # cannot have a segment — skip the per-tier probes; a
+                    # retained batch has none yet either
+                    probe = mode == "publish" and (
+                        bool(self.aggregate)
+                        or (name, version) in self._sealed)
+        if pubs is not None:
+            self._publish_many(name, version, pubs, probe_segments=probe)
 
     def republish_manifest(self, name, version, rank, digest, meta=None):
         """Post-compaction commit for one rank: replace its digest and
@@ -525,13 +978,20 @@ class Cluster:
         compacted — until then other ranks' delta shards still walk the
         chain, and GC must keep it alive."""
         with self._lock:
-            # a fresh process (restart-then-compact) has an empty in-memory
-            # registry: hydrate this version's digests/parent from the
-            # on-disk manifests, else nothing would be republished and the
-            # rewritten shard bytes would fail every stale-digest check.
-            if not any(n == name and v == version
-                       for (n, v, _l) in self._registry):
-                for m in self.manifests(name):
+            hydrated = any(n == name and v == version
+                           for (n, v, _l) in self._registry)
+        # a fresh process (restart-then-compact) has an empty in-memory
+        # registry: hydrate this version's digests/parent from the on-disk
+        # manifests, else nothing would be republished and the rewritten
+        # shard bytes would fail every stale-digest check.  Fetched OUTSIDE
+        # the cluster lock — manifests() may scan rolling packs, which
+        # memoizes membership under the lock.
+        mlist = None if hydrated else self.manifests(name)
+        with self._lock:
+            if mlist is not None and not any(
+                    n == name and v == version
+                    for (n, v, _l) in self._registry):
+                for m in mlist:
                     if m["version"] != version:
                         continue
                     self._registry[(name, version, m["level"])] = \
@@ -559,7 +1019,11 @@ class Cluster:
                         meta=self._meta.get((name, version), {}),
                         parent=parent, group_size=self.group_size)
                     pubs[fmt.manifest_key(name, version) + f".{level}"] = blob
-            self._publish_many_locked(name, version, pubs)
+            mode = self._stage_pubs_locked(name, version, pubs) if pubs \
+                else "staged"
+        if mode != "staged":
+            self._publish_many(name, version, pubs,
+                               probe_segments=mode == "publish")
 
     def ranks_compacted(self, name: str, version: int) -> set:
         """Ranks that have folded their shard of ``version`` full (the
@@ -590,6 +1054,21 @@ class Cluster:
             for key in tier.keys(f"{name}/"):
                 if "/manifest" in key:
                     note(self._tier_get(tier, key))
+                elif key.startswith(fmt.pack_prefix(name)):
+                    # rolling pack: several delta versions' manifests travel
+                    # inside one blob (a torn pack is skipped with a
+                    # diagnostic — none of its members are candidates).
+                    reader = self._pack_reader(tier, name, key)
+                    if reader is None:
+                        continue
+                    for en in reader.names():
+                        if "/manifest" not in en:
+                            continue
+                        try:
+                            note(reader.read(en))
+                        except Exception as e:  # noqa: BLE001
+                            self._diagnose_segment(tier.info.name,
+                                                   key + "#" + en, e)
                 elif key.endswith("/segment"):
                     # aggregated version: its manifests travel inside the
                     # segment — resolve them through the cached index (a
@@ -621,7 +1100,21 @@ class Cluster:
         Delta-aware: versions the survivors transitively reference through
         ``parent`` links (their delta chains down to the full base) are
         refcounted live and kept, whatever their age — dropping a base
-        would strand every delta above it."""
+        would strand every delta above it.
+
+        Pack-aware: a retired version whose L3 entries live in a rolling
+        pack shared with survivors triggers a RE-PACK of the survivors
+        (the pack key sits outside every version prefix, so the prefix
+        delete cannot touch it); a pack whose members all retired is
+        deleted whole.
+
+        Bookkeeping is dropped under the cluster lock, but the tier I/O
+        (prefix deletes, pack rewrites) runs OUTSIDE it under the same
+        per-version / per-pack rewrite-lock discipline as compaction — GC
+        is a maintenance-lane task and must not stall every rank's staging
+        behind external deletes."""
+        drops: list[tuple[int, Optional[threading.Lock]]] = []
+        pack_drops: dict[str, set] = {}
         with self._lock:
             versions = sorted({v for (n, v, _l) in self._registry if n == name},
                               reverse=True)
@@ -633,23 +1126,23 @@ class Cluster:
                     live.add(p)
                     frontier.append(p)
             drop = [v for v in versions if v not in live]
+            rb = self._rolling.get(name)
             for v in drop:
-                # serialize with any in-flight segment rewrite of this
-                # version (its lock is dropped for good afterwards; a
-                # rewrite racing PAST this point could at worst resurrect
-                # one orphan segment file, never a restart candidate)
-                vlock = self._vlocks.pop((name, v), None)
-                if vlock is not None:
-                    with vlock:
-                        pass
-                prefix = fmt.version_prefix(name, v)
-                for tiers in self._node_tiers:
-                    for tier in tiers:
-                        for key in tier.keys(prefix):
-                            tier.delete(key)
-                for tier in self.external_tiers:
-                    for key in tier.keys(prefix):
-                        tier.delete(key)
+                if rb is not None and rb.has(v):
+                    rb.drop_version(v, fmt.version_prefix(name, v))
+                found = self._find_seal_retry_locked(name, v)
+                if found is not None:
+                    rkey, item = found
+                    item["versions"].remove(v)
+                    pfx = fmt.version_prefix(name, v)
+                    for k in [k for k in item["entries"]
+                              if k.startswith(pfx)]:
+                        item["entries"].pop(k, None)
+                    if not item["versions"]:
+                        self._seal_retry.pop(rkey, None)
+                pkey = self._packed.pop((name, v), None)
+                if pkey is not None:
+                    pack_drops.setdefault(pkey, set()).add(v)
                 for k in [k for k in self._registry if k[0] == name and k[1] == v]:
                     self._registry.pop(k, None)
                 self._meta.pop((name, v), None)
@@ -662,6 +1155,56 @@ class Cluster:
                 with self._seg_lock:
                     for ck in [ck for ck in self._segcache if ck[1] == skey]:
                         self._segcache.pop(ck, None)
+                drops.append((v, self._vlocks.pop((name, v), None)))
+            if rb is not None and not rb.versions:
+                self._rolling.pop(name, None)
+        for v, vlock in drops:
+            # serialize with any in-flight segment rewrite of this version
+            # (its lock is dropped for good afterwards; a rewrite racing
+            # PAST this point could at worst resurrect one orphan segment
+            # file, never a restart candidate).  No lock ever existed =
+            # nothing to serialize with.
+            if vlock is not None:
+                vlock.acquire()
+            try:
+                prefix = fmt.version_prefix(name, v)
+                for tiers in self._node_tiers:
+                    for tier in tiers:
+                        for key in tier.keys(prefix):
+                            tier.delete(key)
+                for tier in self.external_tiers:
+                    for key in tier.keys(prefix):
+                        tier.delete(key)
+            finally:
+                if vlock is not None:
+                    vlock.release()
+        for pkey, retired in pack_drops.items():
+            self._repack_io(name, pkey, retired)
+
+    def _repack_io(self, name: str, skey: str, retired: set):
+        """Maintenance-lane pack rewrite after GC retired some members:
+        survivors are re-packed in place (one put per tier), a fully
+        retired pack is deleted."""
+
+        def transform(reader):
+            survivors = [v for v in reader.versions if v not in retired]
+            if not survivors:
+                return None
+            prefixes = tuple(fmt.version_prefix(name, v) for v in retired)
+            entries = {n: reader.read(n, verify=False)
+                       for n in reader.names()
+                       if not n.startswith(prefixes)}
+            return entries, survivors
+
+        kept = self._pack_rmw(name, skey, transform, drop_torn=True)
+        if not kept:
+            # the pack is gone from every tier: drop its rewrite lock or
+            # _plocks grows by one entry per pack for the cluster lifetime.
+            # (A racer that already fetched the old Lock object could at
+            # worst rewrite concurrently with a later same-key pack — the
+            # orphan-resurrection exposure GC already accepts.)
+            with self._plock_guard:
+                self._plocks.pop(skey, None)
 
 
 class VelocClient:
@@ -793,13 +1336,51 @@ class VelocClient:
             meta=dict(meta or {}), cluster=self.cluster, defensive=defensive)
         fut = CheckpointFuture(ctx)
         self.engine.submit(ctx, future=fut)
-        self._history.append({"version": version, "skipped": ctx.skipped,
-                              "blocking_s": ctx.results.get("blocking_s")})
+        # the history row RESOLVES when the pipeline settles: under
+        # mode="async" the background stages are still running here, so a
+        # snapshot taken now would permanently hold stale/default values.
+        row = {"version": version, "skipped": ctx.skipped,
+               "blocking_s": ctx.results.get("blocking_s"),
+               "status": "pending"}
+        self._history.append(row)
+        fut.add_done_callback(
+            lambda f, row=row, ctx=ctx: self._resolve_history(row, f, ctx))
         if self.spec.keep_versions:
-            self.cluster.gc(self.name, self.spec.keep_versions + 1)
+            self._schedule_gc(version)
         if not ctx.skipped and self.spec.compact_threshold:
             self._maybe_compact(version)
         return fut
+
+    def _resolve_history(self, row: dict, fut: CheckpointFuture,
+                         ctx: CheckpointContext):
+        row["skipped"] = ctx.skipped
+        row["blocking_s"] = ctx.results.get("blocking_s")
+        for k in ("shard_bytes", "delta_kind", "l3_tier", "errors"):
+            if k in ctx.results:
+                row[k] = ctx.results[k]
+        if fut.superseded:
+            row["status"] = "superseded"
+        elif ctx.skipped:
+            row["status"] = "skipped"
+        elif fut._exc is not None:  # resolved by _finish before callbacks
+            row["status"] = "error"
+        else:
+            row["status"] = "done"
+
+    def _schedule_gc(self, version: int):
+        """GC prefix-deletes walk every tier of every retired version —
+        external-tier work that has no business on the application thread.
+        With an active backend it runs as a coalesced, idle-gated
+        maintenance task (at most one pending instance however many
+        checkpoints queued it); sync mode keeps the historical inline
+        behaviour."""
+        keep = self.spec.keep_versions + 1
+        if self.backend is not None:
+            self.backend.submit_maintenance(
+                f"gc:{self.name}:{self.rank}", version,
+                lambda: self.cluster.gc(self.name, keep), coalesce=True)
+        else:
+            self.cluster.gc(self.name, keep)
 
     def wait(self, version: Optional[int] = None, timeout: Optional[float] = None
              ) -> bool:
@@ -815,7 +1396,10 @@ class VelocClient:
         Returns (version, state) or (None, None).  Every candidate that was
         tried and failed is recorded in ``self.restart_diagnostics`` as
         {"version", "level", "error"} so operators can see why a version
-        was skipped."""
+        was skipped; a total miss additionally folds the cluster's segment
+        diagnostics in and logs the whole picture — an operator staring at
+        ``(None, None)`` must not have to guess WHY nothing was
+        restorable."""
         from repro.core import restart
 
         self.restart_diagnostics = []
@@ -832,6 +1416,14 @@ class VelocClient:
                     "version": cand["version"], "level": cand.get("level"),
                     "error": f"{type(e).__name__}: {e}"})
                 continue
+        for d in getattr(self.cluster, "segment_diagnostics", []):
+            self.restart_diagnostics.append({
+                "version": None, "level": "segment",
+                "error": f"{d['tier']}:{d['key']}: {d['error']}"})
+        _log.warning(
+            "restart_latest(%r) rank %d: no restorable version "
+            "(%d candidate(s) tried): %s", self.name, self.rank, len(found),
+            self.restart_diagnostics or "no manifests found on any tier")
         return None, None
 
     def compact(self, version: Optional[int] = None) -> int:
@@ -1017,6 +1609,13 @@ class VelocClient:
     def shutdown(self):
         if self.backend is not None:
             self.backend.shutdown()
+        try:
+            # delta versions waiting in an open rolling pack are L1/L2-only;
+            # seal them now so a later fresh process can restore them at L3
+            self.cluster.flush_open_packs(self.name)
+        except Exception as e:  # noqa: BLE001 — the batch stays retained in
+            # cluster._seal_retry; versions remain L1/L2-protected
+            _log.warning("final pack flush of %r failed: %s", self.name, e)
 
 
 def make_client(cfg: Optional[Union[PipelineSpec, VelocConfig]] = None,

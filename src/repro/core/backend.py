@@ -137,15 +137,29 @@ class ActiveBackend:
             cb()
 
     def submit_maintenance(self, kind: str, version: int, fn: Callable, *,
-                           priority: int = 90):
+                           priority: int = 90, coalesce: bool = False):
         """Queue low-priority background maintenance (delta-chain
-        compaction, parity refresh, ...).  Maintenance never competes with
-        checkpoints: a task is only popped while the checkpoint lanes are
-        completely idle, and starts are spaced at least
-        ``maintenance_interval_s`` apart."""
+        compaction, GC, segment re-seals, ...).  Maintenance never competes
+        with checkpoints: a task is only popped while the checkpoint lanes
+        are completely idle, and starts are spaced at least
+        ``maintenance_interval_s`` apart.
+
+        ``coalesce=True`` deduplicates by task kind: queued (not running)
+        older tasks of the same kind are dropped in favour of this one —
+        idempotent sweeps like GC need at most one pending instance however
+        many checkpoints queued them while the lanes were busy."""
         with self._cv:
             if self._stop:
                 raise RuntimeError("backend stopped")
+            if coalesce:
+                kept = [t for t in self._maint
+                        if not (t.kind == kind and t.version <= version)]
+                for t in self._maint:
+                    if t.kind == kind and t.version < version:
+                        self._done[(t.kind, t.version)] = "superseded"
+                if len(kept) != len(self._maint):
+                    self._maint = kept
+                    heapq.heapify(self._maint)
             self._seq += 1
             heapq.heappush(self._maint,
                            _Task(priority, self._seq, version, kind, fn))

@@ -260,6 +260,59 @@ class SegmentReader:
 
 
 # ---------------------------------------------------------------------------
+# rolling pack (cross-version segment packing)
+# ---------------------------------------------------------------------------
+
+#: ``meta["kind"]`` marker distinguishing a rolling pack from a per-version
+#: segment (both share the segment container framing).
+PACK_META_KIND = "rolling-pack"
+
+
+def pack_key(name: str, seq: int) -> str:
+    """Key of a rolling segment packing several consecutive *delta*
+    versions of one stream.  Deliberately OUTSIDE every version's key
+    prefix (``version_prefix``): a pack is shared by its member versions,
+    so per-version prefix GC must never delete it — retiring one member is
+    a maintenance-lane re-pack of the survivors instead."""
+    return f"{name}/pack/{seq:08d}"
+
+
+def pack_prefix(name: str) -> str:
+    """Key prefix every rolling pack of ``name`` lives under."""
+    return f"{name}/pack/"
+
+
+def encode_pack(name: str, entries, versions: list[int],
+                meta: dict | None = None) -> bytes:
+    """Pack several versions' staged blobs into one rolling segment.
+
+    ``entries`` keys keep their full per-version form
+    (``name/vNNNNNNNN/...``), so one container carries many versions and a
+    reader can slice out any member; the *packing record* —
+    ``meta["versions"]`` — names the member versions so a fresh process can
+    index packs without parsing every entry key."""
+    m = dict(meta or {})
+    m["kind"] = PACK_META_KIND
+    m["name"] = name
+    m["versions"] = sorted(int(v) for v in versions)
+    return encode_segment(entries, meta=m)
+
+
+class PackReader(SegmentReader):
+    """SegmentReader over a rolling pack: same strict parse + per-entry
+    digests, plus the packing record (which versions live inside)."""
+
+    @property
+    def versions(self) -> list[int]:
+        return [int(v) for v in self.meta.get("versions", [])]
+
+    def entries_for(self, name: str, version: int) -> list[str]:
+        """Entry names belonging to one member version."""
+        pfx = version_prefix(name, version)
+        return [n for n in self.names() if n.startswith(pfx)]
+
+
+# ---------------------------------------------------------------------------
 # append-only log records (KV journal)
 # ---------------------------------------------------------------------------
 

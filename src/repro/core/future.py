@@ -37,6 +37,8 @@ class CheckpointFuture:
         self._superseded = False
         self._lock = threading.Lock()
         self._levels: dict[str, threading.Event] = {}
+        self._callbacks: list = []
+        self._resolved = False  # _finish ran (callbacks drained)
 
     # -- wiring (engine / backend side) ---------------------------------
     def _level_done(self, level: str):
@@ -55,7 +57,29 @@ class CheckpointFuture:
         self._superseded = superseded
         if superseded:
             self._ctx.results["superseded"] = True
+        # callbacks run BEFORE the completion event: a caller woken by
+        # wait()/result() must observe the resolved side effects (e.g. the
+        # client's history row), not race them.
+        with self._lock:
+            self._resolved = True
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            try:
+                cb(self)
+            except Exception:  # noqa: BLE001 — a bad observer must not
+                pass           # take down the pipeline worker
         self._finished.set()
+
+    def add_done_callback(self, fn):
+        """Run ``fn(future)`` once the pipeline settles — on the finishing
+        thread, or immediately when it already has.  Lets callers resolve
+        derived records (e.g. the client's checkpoint history) from FINAL
+        results instead of a stale submit-time snapshot."""
+        with self._lock:
+            if not self._resolved:
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     # -- inspection ------------------------------------------------------
     @property

@@ -371,8 +371,24 @@ class FlushModule(Module):
     priority = 40
     level = "L3"
 
-    def __init__(self, chunk_bytes: int = 4 << 20):
+    def __init__(self, chunk_bytes: int = 4 << 20, seal_retries: int = 0):
         self.chunk_bytes = chunk_bytes
+        #: failed segment/pack seals schedule up to this many maintenance-
+        #: lane re-seals from the retained batch (needs an active backend)
+        self.seal_retries = seal_retries
+
+    def _schedule_retries(self, ctx, *, failed: bool):
+        """Queue maintenance-lane re-seals for every retained failed-seal
+        batch of this stream (no-op without a backend or retry budget)."""
+        if self.seal_retries <= 0 or ctx.engine is None:
+            return
+        backend = getattr(ctx.engine, "backend", None)
+        if backend is None:
+            return
+        scheduled = ctx.cluster.schedule_seal_retry(
+            backend, ctx.name, self.seal_retries)
+        if failed or scheduled:
+            ctx.results["l3_seal_retry_scheduled"] = scheduled
 
     def _paced_budget(self, ctx, nbytes: int):
         """Charge ``nbytes`` to the cluster rate limiter in chunk-sized
@@ -399,12 +415,20 @@ class FlushModule(Module):
                 sealed = ctx.cluster.stage_l3(
                     ctx.name, ctx.version, ctx.rank, ctx.shard, ctx.digest,
                     meta=ctx.meta)
-            except Exception as e:  # noqa: BLE001 — seal put failed
+            except Exception as e:  # noqa: BLE001 — THIS version's seal put
+                # failed; the batch is retained, so a bounded maintenance-
+                # lane re-seal can still upgrade the version to full L3
+                # protection once the tier recovers
                 ctx.results["l3_error"] = f"{type(e).__name__}: {e}"
+                self._schedule_retries(ctx, failed=True)
                 return "error"
             ctx.results["l3_tier"] = target.info.name
             ctx.results["l3_aggregated"] = True
             ctx.results["l3_sealed"] = sealed
+            # a chain-boundary pack of EARLIER versions may have failed to
+            # seal without touching this version (stage_l3 retains it
+            # silently): sweep the stream's retained batches either way
+            self._schedule_retries(ctx, failed=False)
             return "ok"
         tier = pick_tier(ctx.cluster.external_tiers,
                          need_persistent=True, need_survives_node=True)

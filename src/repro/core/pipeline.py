@@ -127,6 +127,12 @@ class PipelineSpec:
     #: aggregated write path: stage every L3 blob of a version (shards,
     #: parity, manifests) into one segment put on an opted-in external tier
     aggregate: bool = False
+    #: bounded seal retry: after a failed segment/pack seal put the batch is
+    #: retained and up to this many maintenance-lane re-seals are scheduled,
+    #: upgrading the version from L1/L2-only to full L3 protection when the
+    #: tier recovers (0 = a failed seal stays failed until GC).  Forwarded
+    #: into the flush module unless its ModuleSpec sets it explicitly.
+    seal_retries: int = 0
     #: delta-chain depth that triggers automatic compaction (0 = manual
     #: ``client.compact()`` only)
     compact_threshold: int = 0
@@ -156,7 +162,11 @@ class PipelineSpec:
         import repro.core.modules  # noqa: F401 — registers the built-ins
         out = []
         for ms in self.modules:
-            mod = MODULES.create(ms.name, **ms.options)
+            options = ms.options
+            if ms.name == "flush" and self.seal_retries \
+                    and "seal_retries" not in options:
+                options = dict(options, seal_retries=self.seal_retries)
+            mod = MODULES.create(ms.name, **options)
             if ms.priority is not None:
                 mod.priority = ms.priority
             out.append(mod)

@@ -38,11 +38,14 @@ def _manifest_for(cluster, name, version) -> Optional[dict]:
 
 def _segment_hint(cluster, name: str, version: int) -> str:
     """Per-candidate diagnostic suffix when the version's aggregated
-    segment was found torn or corrupt — the operator should see WHY a
-    version is being skipped, not just that it was."""
+    segment — or a rolling pack of its stream, whose membership is
+    unreadable exactly when the pack is torn — was found corrupt: the
+    operator should see WHY a version is being skipped, not just that it
+    was."""
     marker = f"/v{version:08d}/"
     diags = [d for d in getattr(cluster, "segment_diagnostics", [])
-             if marker in d.get("key", "")]
+             if marker in d.get("key", "")
+             or d.get("key", "").startswith(fmt.pack_prefix(name))]
     if not diags:
         return ""
     return " (segment diagnostics: " + "; ".join(

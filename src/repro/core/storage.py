@@ -59,6 +59,12 @@ class TierInfo:
     #: coalesced into one segment put on this tier (high-latency external
     #: stores benefit; DRAM/node-local tiers keep direct puts).
     aggregate: bool = False
+    #: cross-version packing (requires ``aggregate``): up to this many
+    #: consecutive *delta* versions of a stream share one rolling segment,
+    #: sealed in a single put at the pack boundary.  0/1 = one segment per
+    #: version (the plain aggregated path).  Delta versions waiting in an
+    #: open pack are L1/L2-protected only until the pack seals.
+    pack_versions: int = 0
 
 
 class StorageTier:
@@ -133,9 +139,10 @@ class DRAMTier(StorageTier):
 
 class FileTier(StorageTier):
     def __init__(self, root: str, name="file", gbps=5.0, persistent=True,
-                 node_local=False, aggregate=False):
+                 node_local=False, aggregate=False, pack_versions=0):
         super().__init__(TierInfo(name, "file", gbps, persistent, node_local,
-                                  aggregate=aggregate))
+                                  aggregate=aggregate,
+                                  pack_versions=pack_versions))
         self.root = root
         os.makedirs(root, exist_ok=True)
 
@@ -204,9 +211,11 @@ class KVTier(StorageTier):
     a poisoned value would defeat restart's fallback."""
 
     def __init__(self, name="kv", gbps=20.0, journal: Optional[str] = None,
-                 compact_every: int = 512, aggregate: bool = False):
+                 compact_every: int = 512, aggregate: bool = False,
+                 pack_versions: int = 0):
         super().__init__(TierInfo(name, "kv", gbps, persistent=journal is not None,
-                                  node_local=False, aggregate=aggregate))
+                                  node_local=False, aggregate=aggregate,
+                                  pack_versions=pack_versions))
         self._store: dict[str, bytes] = {}
         self._journal = journal
         self._compact_every = compact_every
@@ -384,6 +393,9 @@ class TierSpec:
     node_local: bool = False
     #: opt this tier into the aggregated write path (see TierInfo.aggregate)
     aggregate: bool = False
+    #: cross-version packing width (see TierInfo.pack_versions); only
+    #: meaningful together with ``aggregate=True``
+    pack_versions: int = 0
     options: dict = field(default_factory=dict)
 
     def resolved_name(self, rank: Optional[int] = None) -> str:
@@ -452,7 +464,8 @@ def _build_file(spec: TierSpec, *, scratch: str, rank: Optional[int] = None):
     sub = sub.format(rank="" if rank is None else rank)
     return FileTier(os.path.join(scratch, sub), name=spec.resolved_name(rank),
                     gbps=spec.gbps, persistent=spec.persistent,
-                    node_local=spec.node_local, aggregate=spec.aggregate)
+                    node_local=spec.node_local, aggregate=spec.aggregate,
+                    pack_versions=spec.pack_versions)
 
 
 @register_tier("kv")
@@ -463,6 +476,7 @@ def _build_kv(spec: TierSpec, *, scratch: str, rank: Optional[int] = None):
             scratch, journal.format(rank="" if rank is None else rank))
     return KVTier(name=spec.resolved_name(rank), gbps=spec.gbps,
                   journal=journal, aggregate=spec.aggregate,
+                  pack_versions=spec.pack_versions,
                   compact_every=spec.options.get("compact_every", 512))
 
 
@@ -521,6 +535,42 @@ class WriteBatch:
     @property
     def nbytes(self) -> int:
         return sum(len(b) for b in self.entries.values())
+
+
+class RollingBatch:
+    """Open cross-version pack: consecutive *delta* versions' segment
+    entries accumulate here (entry keys keep their per-version form) until
+    ``TierInfo.pack_versions`` member versions — or a chain boundary —
+    seal the whole pack in ONE put (repro.core.format.encode_pack).
+    Mutated only under the cluster lock."""
+
+    def __init__(self, name: str, seq: int):
+        self.name = name
+        self.seq = seq  # first member version; names the pack key
+        self.versions: list[int] = []
+        self.entries: dict[str, bytes] = {}
+
+    def absorb(self, version: int, entries: dict[str, bytes]):
+        if version not in self.versions:
+            self.versions.append(version)
+        for key, blob in entries.items():
+            self.entries[key] = bytes(blob)
+
+    def has(self, version: int) -> bool:
+        return version in self.versions
+
+    def stage(self, key: str, data: bytes):
+        self.entries[key] = bytes(data)
+
+    def drop_version(self, version: int, prefix: str):
+        """Retire one member (GC): its entries and membership go away."""
+        if version in self.versions:
+            self.versions.remove(version)
+        for key in [k for k in self.entries if k.startswith(prefix)]:
+            self.entries.pop(key, None)
+
+    def __len__(self) -> int:
+        return len(self.entries)
 
 
 def pick_tier(tiers: list[StorageTier], *, need_persistent=False,

@@ -118,3 +118,27 @@ def test_hlo_parser_group_size():
     i2 = Instr("ar", "f32[4]", "all-reduce",
                "%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%a")
     assert i2.group_size(8) == 4
+
+
+def test_bench_only_unknown_name_is_hard_error(capsys):
+    """``benchmarks/run.py --only <typo>`` used to run nothing and exit 0,
+    silently producing no BENCH JSON; an unknown name must fail loudly and
+    list the valid benchmark names."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    try:
+        import run as bench_run
+    finally:
+        sys.path.pop(0)
+    with pytest.raises(SystemExit) as ei:
+        bench_run.main(["--only", "detla"])  # typo'd "delta"
+    assert ei.value.code != 0
+    err = capsys.readouterr().err
+    assert "detla" in err and "bench_delta" in err  # names the valid set
+    # a typo among otherwise-valid patterns is just as fatal
+    with pytest.raises(SystemExit) as ei:
+        bench_run.main(["--only", "delta,nosuchbench"])
+    assert ei.value.code != 0

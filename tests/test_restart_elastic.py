@@ -124,3 +124,47 @@ def test_elastic_end_to_end(tmp_path):
     new = rst.elastic_regions(per_rank, 2)
     np.testing.assert_array_equal(new[0]["w"], glob[:64])
     np.testing.assert_array_equal(new[1]["w"], glob[64:])
+
+
+def test_elastic_scale_up_lands_on_mid_chain_delta(tmp_path):
+    """Scale-up restart from a MID-CHAIN delta version: the overlay walk
+    must resolve each rank's full bytes through the parent chain before
+    re-sharding, and the re-shard must reflect exactly that version's
+    state — not the tip's, not the base's (groundwork for delta-aware
+    elastic restart)."""
+    old_n, new_n = 4, 8
+    cfg, cluster, clients = _cluster(tmp_path, old_n, delta=True,
+                                     delta_chunk_bytes=1024, partner=False,
+                                     xor_group=0, flush=True, keep_versions=10)
+    rows, cols = 64, 256  # 16 KiB per old-rank shard: a dirtied row is one
+    #                         1 KiB chunk, well under the delta cutoff
+    glob = {1: np.arange(rows * cols, dtype=np.float32).reshape(rows, cols)}
+    piece = rows // old_n
+    for v in (2, 3, 4):  # sparse dirty steps -> delta shards
+        g = glob[v - 1].copy()
+        g[(v * 7) % rows, :] += 100.0 * v
+        glob[v] = g
+    for v in (1, 2, 3, 4):
+        for r, c in enumerate(clients):
+            fut = c.checkpoint(
+                {"w": glob[v][r * piece:(r + 1) * piece],
+                 "step": np.asarray(v)}, version=v, device_snapshot=False)
+            assert not fut.module_errors, (v, r, fut.module_errors)
+            if v >= 2:
+                assert fut.results["delta_kind"] == "delta", (v, r)
+    # land on v3: a delta whose parent (v2) is itself a delta over v1
+    per_rank = rst.load_all_regions(cluster, cfg.name, 3)
+    out = rst.elastic_regions(per_rank, new_n)
+    assert len(out) == new_n
+    np.testing.assert_array_equal(
+        np.concatenate([out[r]["w"] for r in range(new_n)], axis=0), glob[3])
+    new_piece = rows // new_n
+    for r in range(new_n):
+        assert out[r]["w"].shape == (new_piece, cols)
+        assert out[r]["step"] == 3  # replicated region broadcast
+    # same walk from a FRESH process (chain resolved via external tiers)
+    fresh = Cluster(cfg, nranks=old_n)
+    per_rank = rst.load_all_regions(fresh, cfg.name, 3)
+    out = rst.elastic_regions(per_rank, new_n)
+    np.testing.assert_array_equal(
+        np.concatenate([out[r]["w"] for r in range(new_n)], axis=0), glob[3])
