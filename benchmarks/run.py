@@ -26,6 +26,10 @@ scale with the scaling factor stated in the ``derived`` column.
                   of a stream coalesced into one rolling segment put
                   (pack_versions=4) — L3 puts/version vs the per-version
                   segment store.
+  bench_restart   restart planning at scale: 64 delta versions — key
+                  listings per restart and planning wall time, durable
+                  stream catalog on vs off (scan discovery is O(versions)
+                  listings per restart; the catalog needs none).
   bench_scale     modeled weak-scaling of the L3 flush under shared-PFS
                   bandwidth (flush contention), from the storage model.
 
@@ -394,6 +398,70 @@ def bench_packing():
         f"speedup={s_t / max(p_t, 1e-9):.2f}x")
 
 
+def bench_restart():
+    """Restart planning at scale: a fresh process must discover what is
+    durable where before it can fetch a byte.  Scan discovery pays key
+    listings per (tier, stream) on every manifest walk — O(versions) of
+    them across a restart with delta chains — while the durable stream
+    catalog resolves the version set, chains and pack membership from one
+    small blob per (tier, stream): zero listings.  64 delta versions
+    (packs of 4, chains of 16), catalog off vs on."""
+    from repro.core import Cluster, VelocClient, VelocConfig
+    from repro.core import restart as rst
+
+    nv = 64
+    n = (256 << 10) // 4  # 256 KiB of f32 state
+    rng = np.random.default_rng(0)
+    w0 = rng.standard_normal(n).astype(np.float32)
+    dirty = max(1, n // 100)
+
+    def build(catalog):
+        root = f"/tmp/veloc_bench_restart_{int(catalog)}"
+        shutil.rmtree(root, ignore_errors=True)
+        cfg = VelocConfig(scratch=root, mode="sync", delta=True,
+                          delta_chunk_bytes=16 * 1024, delta_max_chain=16,
+                          partner=False, xor_group=0, flush=True,
+                          keep_versions=100, aggregate=True, pack_versions=4,
+                          catalog=catalog)
+        client = VelocClient(cfg)
+        w = w0
+        for v in range(1, nv + 1):
+            w = w.copy()
+            lo = (v * 9973) % (n - dirty)
+            w[lo:lo + dirty] += 1.0
+            client.checkpoint({"w": w}, version=v, device_snapshot=False)
+        client.shutdown()
+        return cfg
+
+    def measure(cfg):
+        cluster = Cluster(cfg, nranks=1)
+        client = VelocClient(cfg, cluster, rank=0)
+        for tiers in cluster._node_tiers:
+            for t in tiers:
+                t.wipe()  # fresh node: externals must serve the restore
+        tiers = cluster.external_tiers + \
+            [t for ts in cluster._node_tiers for t in ts]
+        for t in tiers:
+            t.keys_calls = 0
+        t0 = time.perf_counter()
+        plan = rst.plan_restart(cluster, cfg.name)
+        t_plan = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        v, _state = client.restart_latest({"w": np.zeros(n, np.float32)})
+        t_restore = time.perf_counter() - t0
+        keys = sum(t.keys_calls for t in tiers)
+        assert v == nv, (v, client.restart_diagnostics)
+        return plan["mode"], t_plan, t_restore, keys
+
+    m0, p0, r0, k0 = measure(build(False))
+    m1, p1, r1, k1 = measure(build(True))
+    row(f"restart_{m0}_{nv}v_plan", p0 * 1e6,
+        f"{k0}keys_calls,restore={r0 * 1e3:.0f}ms")
+    row(f"restart_{m1}_{nv}v_plan", p1 * 1e6,
+        f"{k1}keys_calls,restore={r1 * 1e3:.0f}ms,"
+        f"keys_eliminated={k0 - k1},plan_speedup={p0 / max(p1, 1e-9):.2f}x")
+
+
 def bench_scale():
     """Weak-scaling model of the L3 flush: N nodes share the PFS; per-node
     flush time grows linearly while L1+L2 stay flat — the paper's core
@@ -413,7 +481,7 @@ def bench_scale():
 
 ALL_BENCHES = (bench_levels, bench_engine, bench_erasure, bench_capture,
                bench_async, bench_delta, bench_aggregation, bench_packing,
-               bench_interval, bench_scale)
+               bench_restart, bench_interval, bench_scale)
 
 
 def main(argv=None) -> None:

@@ -27,6 +27,7 @@ from __future__ import annotations
 import logging
 import threading
 import time
+import uuid
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Union
 
@@ -40,7 +41,7 @@ from repro.core.pipeline import ModuleSpec, PipelineSpec
 from repro.core.storage import (RollingBatch, StorageTier, TierSpec,
                                 TierTopology, WriteBatch,
                                 default_external_specs, default_node_specs,
-                                pick_tier)
+                                pick_tier, read_catalog, write_catalog)
 
 _log = logging.getLogger("repro.veloc")
 
@@ -72,6 +73,12 @@ class VelocConfig:
     #                                     segment put (requires aggregate)
     seal_retries: int = 2               # maintenance-lane re-seal attempts
     #                                     after a failed segment/pack put
+    seal_backoff_base_s: float = 0.25   # re-seals back off base*2**attempt
+    seal_backoff_cap_s: float = 15.0    # ... capped here (0 base = legacy
+    #                                     maintenance_interval_s spacing)
+    catalog: bool = False               # durable stream catalog on external
+    #                                     tiers: restart-safe GC + O(1)
+    #                                     restart planning
     compact_threshold: int = 0          # deltas before auto-compaction (0=off)
     compact_async: bool = False         # auto-compact in the maintenance lane
     partner: bool = True
@@ -123,6 +130,8 @@ class VelocConfig:
                             keep_versions=self.keep_versions,
                             aggregate=self.aggregate,
                             seal_retries=self.seal_retries,
+                            seal_backoff_base_s=self.seal_backoff_base_s,
+                            seal_backoff_cap_s=self.seal_backoff_cap_s,
                             compact_threshold=self.compact_threshold,
                             compact_async=self.compact_async)
 
@@ -144,6 +153,9 @@ class VelocConfig:
             for s in external:
                 s.aggregate = True
                 s.pack_versions = self.pack_versions
+        if self.catalog:
+            for s in external:
+                s.catalog = True
         return TierTopology(scratch=self.scratch, node=default_node_specs(),
                             external=external)
 
@@ -225,6 +237,24 @@ class Cluster:
         #: these per candidate instead of silently decoding garbage)
         self.segment_diagnostics: list[dict] = []
         self._seg_diagnosed: set = set()
+        # -- durable stream catalog state -------------------------------
+        #: this process's incarnation identity; stamps every catalog record
+        #: it creates, so retirement tombstones never suppress a LATER
+        #: run's legitimate reuse of the same version number
+        self._run_stamp = uuid.uuid4().hex[:12]
+        #: name -> {"versions": {v: rec}, "tombstones": {v: {stamps}}}
+        #: (this process's authoritative view; mutated under the cluster
+        #: lock, persisted by maintenance-lane ``sync_catalog`` RMWs)
+        self._cat_state: dict[str, dict] = {}
+        self._cat_dirty: set = set()  # streams with unpersisted updates
+        self._cat_cache: dict[str, dict] = {}  # merged on-disk view
+        self._cat_locks: dict[str, threading.Lock] = {}  # per-stream RMW
+        self._cat_guard = threading.Lock()
+        #: torn / missing / raced catalog blobs observed (operators +
+        #: tests see WHY the scan fallback engaged)
+        self.catalog_diagnostics: list[dict] = []
+        self._cat_diagnosed: set = set()
+        self._gc_swept: set = set()  # streams orphan-pack-swept once
 
     # ------------------------------------------------------------------
     def node_tiers(self, rank: int) -> list[StorageTier]:
@@ -385,6 +415,236 @@ class Cluster:
         except Exception as e:  # noqa: BLE001 — corrupt entry reads as miss
             self._diagnose_segment(tier.info.name, skey + "#" + key, e)
             return None
+
+    # -- durable stream catalog ------------------------------------------
+    def catalog_tiers(self) -> list[StorageTier]:
+        """External tiers opted into holding the durable stream catalog."""
+        return [t for t in self.external_tiers
+                if getattr(t.info, "catalog", False)]
+
+    def _diagnose_catalog(self, tier_name: Optional[str], name: str,
+                          err: str):
+        sig = (tier_name, name, err)
+        with self._seg_lock:
+            if sig in self._cat_diagnosed:
+                return
+            self._cat_diagnosed.add(sig)
+            self.catalog_diagnostics.append(
+                {"tier": tier_name, "stream": name, "error": err})
+        _log.warning("stream %r: catalog on %s: %s", name,
+                     tier_name or "<all tiers>", err)
+
+    def _note_catalog_fallback(self, name: str, context: str):
+        self._diagnose_catalog(
+            None, name,
+            f"no healthy catalog blob; {context} fell back to key-scan "
+            f"discovery")
+
+    def _cat_lock(self, name: str) -> threading.Lock:
+        with self._cat_guard:
+            return self._cat_locks.setdefault(name, threading.Lock())
+
+    def _cat_note_locked(self, name: str, version: int, *,
+                         level: Optional[str] = None,
+                         sealed: Optional[bool] = None,
+                         location: Optional[str] = None,
+                         pack: Optional[str] = None,
+                         entries=None,
+                         compacted: bool = False):
+        """Record a durability-state change for one version (cluster lock
+        held).  Cheap bookkeeping only — the durable RMW happens later in
+        ``sync_catalog`` on the maintenance lane."""
+        if not self.catalog_tiers():
+            return
+        st = self._cat_state.setdefault(
+            name, {"versions": {}, "tombstones": {}})
+        if self._run_stamp in st["tombstones"].get(version, ()):
+            return  # our own GC already retired it; a late racer must not
+            #         resurrect the record
+        rec = st["versions"].get(version)
+        if rec is None:
+            rec = st["versions"][version] = {
+                "kind": "full", "parent": None, "sealed": False,
+                "location": "direct", "pack": None, "entries": None,
+                "levels": [], "stamp": self._run_stamp}
+        if compacted:
+            rec["kind"], rec["parent"] = "full", None
+        else:
+            p = self._parents.get((name, version))
+            rec["parent"] = p
+            rec["kind"] = "delta" if p is not None else "full"
+        if level is not None and level not in rec["levels"]:
+            rec["levels"] = sorted(rec["levels"] + [level])
+        if sealed is not None:
+            rec["sealed"] = sealed
+        if location is not None:
+            rec["location"] = location
+        if pack is not None:
+            rec["pack"] = pack
+        if entries is not None:
+            rec["entries"] = sorted(entries)
+        self._cat_dirty.add(name)
+
+    def _cat_note_seal_locked(self, name: str, job: dict):
+        """Catalog bookkeeping for a successful segment/pack seal."""
+        for v in job["versions"]:
+            ents = None
+            if job["pack"]:
+                pfx = fmt.version_prefix(name, v)
+                ents = [k for k in job["entries"] if k.startswith(pfx)]
+            self._cat_note_locked(
+                name, v, level="L3", sealed=True,
+                location="pack" if job["pack"] else "segment",
+                pack=job["skey"] if job["pack"] else None, entries=ents)
+
+    def _cat_merge_locked(self, name: str, disk: Optional[dict]):
+        """Merge the fresh on-disk catalog into this process's state
+        (cluster lock held).  Tombstones win: a record whose stamp matches
+        a retirement tombstone stays dead — this is what stops a stale
+        writer from resurrecting a version a concurrent GC retired.  The
+        merged view is ADOPTED in memory, so other writers' versions (and
+        their tombstones) become visible to this process too."""
+        st = self._cat_state.setdefault(
+            name, {"versions": {}, "tombstones": {}})
+        tombs: dict[int, set] = {v: set(s)
+                                 for v, s in st["tombstones"].items()}
+        merged: dict[int, dict] = {}
+        if disk:
+            for v, rec in disk.get("versions", {}).items():
+                merged[int(v)] = dict(rec)
+            for v, stamp in disk.get("tombstones", []):
+                tombs.setdefault(int(v), set()).add(stamp)
+        merged.update({v: dict(r) for v, r in st["versions"].items()})
+        merged = {v: r for v, r in merged.items()
+                  if r.get("stamp") not in tombs.get(v, ())}
+        if len(tombs) > 256:  # bound the blob: oldest tombstones age out
+            for v in sorted(tombs)[:len(tombs) - 256]:
+                tombs.pop(v)
+        st["versions"] = {v: dict(r) for v, r in merged.items()}
+        st["tombstones"] = {v: set(s) for v, s in tombs.items()}
+        return merged, [[v, s] for v in sorted(tombs)
+                        for s in sorted(tombs[v])]
+
+    def _cat_rmw(self, tier: StorageTier, name: str) -> bool:
+        """One catalog read-modify-write against one tier.  Always merges
+        against the FRESH blob (never a cached copy), and verifies the
+        write landed; when another writer raced us past the put, the RMW
+        retries exactly once against the then-fresh blob — losing the race
+        with a concurrent GC must not republish a retired version."""
+        key = fmt.catalog_key(name)
+        last_gen = 0
+        for attempt in (0, 1):
+            disk, err = read_catalog(tier, name)
+            if err:
+                # torn/corrupt blob: diagnose, then self-heal by rewriting
+                # from the merged live state (the decoder never let the
+                # damage silently drop versions — we are the writer here)
+                self._diagnose_catalog(tier.info.name, name, err)
+            with self._lock:
+                versions, tombs = self._cat_merge_locked(name, disk)
+                # floor on the gen WE already wrote: a torn/unreadable
+                # re-read must not reset a gen-N blob back to gen 1
+                gen = max(int((disk or {}).get("gen", 0)), last_gen) + 1
+            last_gen = gen
+            blob = write_catalog(tier, name, versions, tombs, gen=gen,
+                                 writer=self._run_stamp)
+            try:
+                back = tier.get(key)
+            except Exception:  # noqa: BLE001 — the put itself succeeded;
+                # a flaky verify read is NOT a racing writer.  Trust the
+                # write rather than burning the race retry on it.
+                return True
+            if back == blob:
+                return True
+            # raced: someone overwrote between our put and the read-back
+        self._diagnose_catalog(
+            tier.info.name, name,
+            "concurrent catalog writers raced twice; deferring to the "
+            "other writer's blob")
+        return False
+
+    def sync_catalog(self, name: str, *, force: bool = False) -> bool:
+        """Persist this stream's catalog to every catalog tier (no-op when
+        nothing changed, unless ``force``).  Maintenance-lane discipline:
+        call WITHOUT the cluster lock — bookkeeping reads take it briefly,
+        the tier I/O runs under the per-stream catalog lock only."""
+        tiers = self.catalog_tiers()
+        if not tiers:
+            return False
+        with self._cat_lock(name):
+            with self._lock:
+                if name not in self._cat_dirty and not force:
+                    return False
+                self._cat_dirty.discard(name)
+            wrote = False
+            redirty = False
+            for tier in tiers:
+                try:
+                    ok = self._cat_rmw(tier, name)
+                except Exception as e:  # noqa: BLE001 — tier down
+                    self._diagnose_catalog(
+                        tier.info.name, name,
+                        f"sync failed: {type(e).__name__}: {e}")
+                    ok = False
+                wrote = ok or wrote
+                # an RMW that raced out (returned False) must NOT eat the
+                # dirty bit, or this process's updates would never reach
+                # the durable catalog on any later sync
+                redirty = redirty or not ok
+            if redirty:
+                with self._lock:
+                    self._cat_dirty.add(name)
+            with self._lock:
+                self._cat_cache.pop(name, None)
+        return wrote
+
+    def load_catalog(self, name: str, *, refresh: bool = False
+                     ) -> Optional[dict]:
+        """The stream's merged durable-catalog view ``{"versions": {v:
+        rec}, "tombstones": {v: {stamps}}}``, or None when no catalog tier
+        holds a healthy blob (each torn/unreadable blob is diagnosed).
+        Successful loads seed the pack-membership index, so catalog-first
+        restarts resolve packed versions without any ``keys()`` listing.
+        The view is cached per stream; ``refresh=True`` re-reads (GC does,
+        so another process's retirements are honoured)."""
+        tiers = self.catalog_tiers()
+        if not tiers:
+            return None
+        if not refresh:
+            with self._lock:
+                if name in self._cat_cache:
+                    return self._cat_cache[name]
+        blobs = []
+        for tier in tiers:
+            disk, err = read_catalog(tier, name)
+            if err:
+                self._diagnose_catalog(tier.info.name, name, err)
+            elif disk is not None:
+                blobs.append(disk)
+        if not blobs:
+            return None
+        blobs.sort(key=lambda d: int(d.get("gen", 0)))
+        versions: dict[int, dict] = {}
+        tombs: dict[int, set] = {}
+        for d in blobs:  # oldest gen first: newest generation wins
+            for v, rec in d.get("versions", {}).items():
+                versions[int(v)] = dict(rec)
+            for v, stamp in d.get("tombstones", []):
+                tombs.setdefault(int(v), set()).add(stamp)
+        versions = {v: r for v, r in versions.items()
+                    if r.get("stamp") not in tombs.get(v, ())}
+        view = {"versions": versions, "tombstones": tombs}
+        with self._lock:
+            # seed pack membership POSITIVELY only: a catalog-complete
+            # restore then resolves every packed entry without a listing,
+            # while a fetch of a version a STALE catalog doesn't know
+            # still falls back to the one-shot pack scan — staleness must
+            # never make durable data undiscoverable
+            for v, rec in versions.items():
+                if rec.get("pack"):
+                    self._packed.setdefault((name, v), rec["pack"])
+            self._cat_cache[name] = view
+        return view
 
     def stage_l3(self, name: str, version: int, rank: int, shard: bytes,
                  digest: str, meta: Optional[dict] = None) -> bool:
@@ -547,6 +807,8 @@ class Cluster:
                     "attempts": 0, "scheduled": False}
             raise
         self._cache_seal_job(tier, job, seg)
+        with self._lock:
+            self._cat_note_seal_locked(name, job)
 
     # -- bounded seal retry ---------------------------------------------
     def _find_seal_retry_locked(self, name: str, version: int
@@ -556,11 +818,31 @@ class Cluster:
                 return skey, item
         return None
 
-    def seal_retry_pending(self, name: str) -> list[int]:
-        """Versions whose failed seal batch is retained awaiting a re-seal."""
+    def seal_retry_pending(self, name: str, *, detail: bool = False):
+        """Versions whose failed seal batch is retained awaiting a re-seal.
+        ``detail=True`` returns per-batch operator records instead: the
+        segment/pack key, member versions, attempts burned, and
+        ``next_attempt_in_s`` — seconds until the backed-off next re-seal
+        (None when no attempt is currently scheduled)."""
         with self._lock:
-            return sorted(v for item in self._seal_retry.values()
-                          if item["name"] == name for v in item["versions"])
+            if not detail:
+                return sorted(v for item in self._seal_retry.values()
+                              if item["name"] == name
+                              for v in item["versions"])
+            now = time.monotonic()
+            out = []
+            for skey in sorted(self._seal_retry):
+                item = self._seal_retry[skey]
+                if item["name"] != name:
+                    continue
+                na = item.get("next_attempt")
+                out.append({
+                    "skey": skey, "versions": sorted(item["versions"]),
+                    "attempts": item["attempts"],
+                    "scheduled": item["scheduled"],
+                    "next_attempt_in_s":
+                        max(0.0, na - now) if na is not None else None})
+            return out
 
     def retry_seal(self, name: str, version: int) -> bool:
         """One re-seal attempt for the retained batch holding ``version``.
@@ -621,17 +903,34 @@ class Cluster:
                 if job["pack"]:
                     self._packed[(name, v)] = skey
                 self._seal_errors.pop((name, v), None)
+            self._cat_note_seal_locked(name, job)
         self._cache_seal_job(tier, job, seg)
         return True
 
-    def schedule_seal_retry(self, backend, name: str, retries: int) -> bool:
+    def schedule_seal_retry(self, backend, name: str, retries: int, *,
+                            backoff_base: float = 0.0,
+                            backoff_cap: float = 15.0) -> bool:
         """Queue up to ``retries`` maintenance-lane re-seal attempts for
         EVERY retained batch of stream ``name`` not already scheduled
         (idle-gated and rate-limited like all maintenance).  Keyed on the
         stream, not a version: the flush that observed the failure may
         have been sealing its own version's segment, the chain-boundary
         rolling pack of EARLIER versions, or both.  Deduplicated: one
-        scheduled chain per retained batch."""
+        scheduled chain per retained batch.
+
+        Attempts back off exponentially — attempt N starts no earlier than
+        ``backoff_base * 2**N`` seconds after it is scheduled (capped at
+        ``backoff_cap``) — so an external tier that is down for minutes is
+        probed a handful of times, not hammered every maintenance window.
+        ``backoff_base=0`` keeps the legacy ``maintenance_interval_s``-only
+        spacing.  The deadline is visible to operators via
+        ``seal_retry_pending(name, detail=True)``."""
+
+        def delay_for(attempts: int) -> float:
+            if backoff_base <= 0:
+                return 0.0
+            return min(backoff_base * (2 ** attempts), backoff_cap)
+
         targets = []
         with self._lock:
             for skey, item in self._seal_retry.items():
@@ -639,23 +938,32 @@ class Cluster:
                         or item["attempts"] >= retries:
                     continue
                 item["scheduled"] = True
-                targets.append((skey, max(item["versions"])))
+                delay = delay_for(item["attempts"])
+                item["next_attempt"] = time.monotonic() + delay
+                targets.append((skey, max(item["versions"]), delay))
         kind = f"seal-retry:{name}"
-        for skey, ver in targets:
+        for skey, ver, delay in targets:
             def attempt(skey=skey, ver=ver):
                 ok = self._retry_seal_key(skey)
-                resubmit = False
+                resubmit: Optional[float] = None
                 with self._lock:
                     it = self._seal_retry.get(skey)
                     if it is not None:
                         it["scheduled"] = False
+                        it.pop("next_attempt", None)
                         if not ok and it["attempts"] < retries:
                             it["scheduled"] = True
-                            resubmit = True
-                if resubmit:
-                    backend.submit_maintenance(kind, ver, attempt)
+                            resubmit = delay_for(it["attempts"])
+                            it["next_attempt"] = time.monotonic() + resubmit
+                if ok:
+                    # the upgrade to full L3 must reach the durable catalog
+                    # too (we are already on the maintenance lane)
+                    self.sync_catalog(name)
+                if resubmit is not None:
+                    backend.submit_maintenance(kind, ver, attempt,
+                                               delay_s=resubmit)
 
-            backend.submit_maintenance(kind, ver, attempt)
+            backend.submit_maintenance(kind, ver, attempt, delay_s=delay)
         return bool(targets)
 
     def flush_open_packs(self, name: Optional[str] = None) -> int:
@@ -959,6 +1267,7 @@ class Cluster:
                     parent=self._parents.get((name, version)),
                     group_size=self.group_size)
                 key = fmt.manifest_key(name, version) + f".{level}"
+                self._cat_note_locked(name, version, level=level)
                 mode = self._stage_pubs_locked(name, version, {key: blob})
                 if mode != "staged":
                     pubs = {key: blob}
@@ -1006,6 +1315,7 @@ class Cluster:
                 self._parents[(name, version)] = None
                 if meta is not None:
                     self._meta[(name, version)] = dict(meta)
+                self._cat_note_locked(name, version, compacted=True)
             parent = self._parents.get((name, version))
             pubs: dict[str, bytes] = {}
             for (n, v, level), reg in self._registry.items():
@@ -1039,16 +1349,109 @@ class Cluster:
             return any(rank in reg for (n, v, _l), reg in
                        self._registry.items() if n == name and v == version)
 
+    @staticmethod
+    def _note_manifest(out: dict, blob):
+        if blob:
+            try:
+                m = fmt.parse_manifest(blob)
+            except Exception:  # noqa: BLE001 — unparseable manifest
+                return
+            out[(m["version"], m["level"])] = m
+
     def manifests(self, name: str) -> list[dict]:
-        out = {}
+        """Every readable manifest of the stream, newest first.
+
+        Catalog-first: when a durable stream catalog is available, the
+        version set comes from it (one catalog get) and each version's
+        manifests resolve through DETERMINISTIC keys — direct manifest
+        blobs, the per-version segment, or the recorded pack — so the
+        whole discovery costs zero ``keys()`` listings.  When catalogs are
+        enabled but no healthy blob exists (deleted, torn, pre-catalog
+        data), discovery degrades to the historical key-scan with a logged
+        diagnostic."""
+        cat = self.load_catalog(name)
+        if cat is None and self.catalog_tiers():
+            with self._lock:
+                pending = bool(self._cat_state.get(name, {}).get("versions"))
+            if pending:
+                # no blob yet but this process holds unsynced state (the
+                # normal async window between a flush and the first
+                # maintenance-lane sync): seed the catalog instead of
+                # warning through the scan fallback
+                self.sync_catalog(name, force=True)
+                cat = self.load_catalog(name, refresh=True)
+        if cat is not None:
+            return self._manifests_from_catalog(name, cat)
+        scanned = self._manifests_scan(name)
+        if scanned and self.catalog_tiers():
+            # only noteworthy when data EXISTS that the catalog doesn't
+            # cover — a cold start with nothing on disk is not a fallback
+            self._note_catalog_fallback(name, "manifest discovery")
+        return scanned
+
+    def _manifests_from_catalog(self, name: str, cat: dict) -> list[dict]:
+        out: dict = {}
+        with self._lock:
+            # union with the in-memory registry: versions this process
+            # published whose catalog sync is still pending must not be
+            # invisible to its own restart/compaction paths
+            versions = set(cat["versions"]) | \
+                {v for (n, v, _l) in self._registry if n == name}
+            packed = {v: self._packed.get((name, v)) for v in versions}
+        for v in sorted(versions, reverse=True):
+            rec = cat["versions"].get(v)
+            base = fmt.manifest_key(name, v)
+            pk = (rec or {}).get("pack") or packed.get(v)
+            # the record narrows the probes: direct manifest gets only for
+            # levels that ever published (L3 only when it wasn't sealed
+            # into a segment/pack — sealed L3 manifests travel inside),
+            # and the per-version segment only when one can exist.  A
+            # version without a record (in-memory registry only) probes
+            # everything.
+            if rec is None:
+                levels = ("L1", "L2", "L3")
+                probe_segment = True
+            else:
+                sealed_inside = rec.get("sealed") and \
+                    rec.get("location") in ("segment", "pack")
+                levels = tuple(lv for lv in rec.get("levels", ())
+                               if lv != "L3" or not sealed_inside)
+                probe_segment = rec.get("location") != "pack" or \
+                    not rec.get("sealed")
+            for tier in self.external_tiers:
+                for level in levels:
+                    self._note_manifest(
+                        out, self._tier_get(tier, f"{base}.{level}"))
+                if probe_segment:
+                    reader = self._segment_reader(tier, name, v)
+                    if reader is not None:
+                        for en in reader.names():
+                            if "/manifest" in en:
+                                self._note_manifest(
+                                    out,
+                                    self._segment_entry(tier, name, v, en))
+                if not pk:
+                    continue
+                preader = self._pack_reader(tier, name, pk)
+                if preader is None:
+                    continue
+                for en in preader.entries_for(name, v):
+                    if "/manifest" not in en:
+                        continue
+                    try:
+                        self._note_manifest(out, preader.read(en))
+                    except Exception as e:  # noqa: BLE001
+                        self._diagnose_segment(tier.info.name,
+                                               pk + "#" + en, e)
+        return [m for _, m in sorted(out.items(), reverse=True)]
+
+    def _manifests_scan(self, name: str) -> list[dict]:
+        """Key-scan manifest discovery (the pre-catalog path, and the
+        fallback when the catalog is missing or torn)."""
+        out: dict = {}
 
         def note(blob):
-            if blob:
-                try:
-                    m = fmt.parse_manifest(blob)
-                except Exception:  # noqa: BLE001 — unparseable manifest
-                    return
-                out[(m["version"], m["level"])] = m
+            self._note_manifest(out, blob)
 
         for tier in self.external_tiers:
             for key in tier.keys(f"{name}/"):
@@ -1097,6 +1500,14 @@ class Cluster:
         shards, partner copies, parity blobs and per-level manifests, on
         node-local AND external tiers (prefix delete per version).
 
+        Restart-safe: enumeration is the UNION of the in-memory registry
+        and the durable stream catalog (falling back to a manifest key
+        scan — with a diagnostic — when catalogs are enabled but no
+        healthy blob exists), so a FRESH process retires a previous run's
+        versions and orphaned packs without that run's registry.  Retired
+        versions leave ``(version, stamp)`` tombstones in the catalog, so
+        a concurrent writer's stale RMW can never resurrect them.
+
         Delta-aware: versions the survivors transitively reference through
         ``parent`` links (their delta chains down to the full base) are
         refcounted live and kept, whatever their age — dropping a base
@@ -1106,26 +1517,97 @@ class Cluster:
         pack shared with survivors triggers a RE-PACK of the survivors
         (the pack key sits outside every version prefix, so the prefix
         delete cannot touch it); a pack whose members all retired is
-        deleted whole.
+        deleted whole, and a sweep of the stream's pack keys retires
+        orphaned packs whose members are ALL known-dead (dropped now or
+        tombstoned earlier) — never packs with members of unknown fate.
 
         Bookkeeping is dropped under the cluster lock, but the tier I/O
-        (prefix deletes, pack rewrites) runs OUTSIDE it under the same
-        per-version / per-pack rewrite-lock discipline as compaction — GC
-        is a maintenance-lane task and must not stall every rank's staging
-        behind external deletes."""
+        (prefix deletes, pack rewrites, the catalog RMW) runs OUTSIDE it
+        under the same per-version / per-pack rewrite-lock discipline as
+        compaction — GC is a maintenance-lane task and must not stall
+        every rank's staging behind external deletes."""
+        cat_enabled = bool(self.catalog_tiers())
+        # NOTE: _gc_swept is only marked after the reconciling scan and
+        # orphan-pack sweep actually complete — a sweep that throws (or
+        # skips a flaky tier) retries on the next gc
+        first_sweep = cat_enabled and name not in self._gc_swept
+        cat = self.load_catalog(name, refresh=True) if cat_enabled else None
+        if cat_enabled and cat is None:
+            with self._lock:
+                pending = bool(self._cat_state.get(name, {}).get("versions"))
+            if pending:
+                # no blob yet but this process holds unsynced state (e.g.
+                # the very first sweep raced the very first sync on a
+                # parallel maintenance worker): seed the catalog now
+                # instead of warning through the scan fallback
+                self.sync_catalog(name, force=True)
+                cat = self.load_catalog(name, refresh=True)
+        cat_versions: dict[int, dict] = {} if cat is None else cat["versions"]
+        cat_tombs: dict[int, set] = {} if cat is None else cat["tombstones"]
+        scan_manifests: list[dict] = []
+        if cat_enabled and cat is None:
+            scan_manifests = self._manifests_scan(name)
+            if scan_manifests:
+                self._note_catalog_fallback(name, "gc enumeration")
+        elif first_sweep:
+            # one-time migration / stale-recovery merge: a HEALTHY catalog
+            # may still be missing versions written before catalogs were
+            # enabled (or sealed by a run that crashed before its sync) —
+            # the first sweep of each process reconciles the blob against
+            # one key scan so such versions are adopted, GC'd when old,
+            # and visible to catalog-first restarts, instead of leaking
+            # on every tier forever
+            scan_manifests = self._manifests_scan(name)
         drops: list[tuple[int, Optional[threading.Lock]]] = []
         pack_drops: dict[str, set] = {}
         with self._lock:
-            versions = sorted({v for (n, v, _l) in self._registry if n == name},
+            parents: dict[int, Optional[int]] = {}
+            scan_levels: dict[int, set] = {}
+            for m in scan_manifests:  # oldest applied last wins — any level
+                parents.setdefault(m["version"], m.get("parent"))
+                scan_levels.setdefault(m["version"], set()).add(m["level"])
+            parents.update({v: r.get("parent")
+                            for v, r in cat_versions.items()})
+            parents.update({v: p for (n, v), p in self._parents.items()
+                            if n == name})
+            versions = sorted({v for (n, v, _l) in self._registry
+                               if n == name}
+                              | set(cat_versions) | set(scan_levels),
                               reverse=True)
             live = set(versions[:keep])
             frontier = list(live)
             while frontier:
-                p = self._parents.get((name, frontier.pop()))
+                p = parents.get(frontier.pop())
                 if p is not None and p not in live:
                     live.add(p)
                     frontier.append(p)
             drop = [v for v in versions if v not in live]
+            st = None
+            adopted = 0
+            if cat_enabled:
+                st = self._cat_state.setdefault(
+                    name, {"versions": {}, "tombstones": {}})
+                # migration: live versions discovered only by the scan
+                # (pre-catalog data, or a crashed run's unsynced seals)
+                # get adopted into the catalog, so the NEXT restart/gc
+                # plans from it instead of re-scanning
+                for v in live:
+                    if v in st["versions"] or v in cat_versions \
+                            or v not in scan_levels:
+                        continue
+                    pk = self._packed.get((name, v))
+                    st["versions"][v] = {
+                        "kind": "delta" if parents.get(v) is not None
+                                else "full",
+                        "parent": parents.get(v),
+                        "sealed": pk is not None
+                        or (name, v) in self._sealed,
+                        "location": "pack" if pk else "direct",
+                        "pack": pk, "entries": None,
+                        "levels": sorted(scan_levels.get(v, ())),
+                        "stamp": self._run_stamp}
+                    self._cat_dirty.add(name)
+                    adopted += 1
             rb = self._rolling.get(name)
             for v in drop:
                 if rb is not None and rb.has(v):
@@ -1141,8 +1623,16 @@ class Cluster:
                     if not item["versions"]:
                         self._seal_retry.pop(rkey, None)
                 pkey = self._packed.pop((name, v), None)
+                if pkey is None:
+                    pkey = (cat_versions.get(v) or {}).get("pack")
                 if pkey is not None:
                     pack_drops.setdefault(pkey, set()).add(v)
+                if st is not None:
+                    rec = st["versions"].pop(v, None)
+                    stamp = (rec or cat_versions.get(v)
+                             or {}).get("stamp") or "?"
+                    st["tombstones"].setdefault(v, set()).add(stamp)
+                    self._cat_dirty.add(name)
                 for k in [k for k in self._registry if k[0] == name and k[1] == v]:
                     self._registry.pop(k, None)
                 self._meta.pop((name, v), None)
@@ -1178,8 +1668,54 @@ class Cluster:
             finally:
                 if vlock is not None:
                     vlock.release()
+        if adopted:
+            self._diagnose_catalog(
+                None, name,
+                f"adopted {adopted} version(s) the durable catalog did "
+                f"not cover (pre-catalog data or a crashed run's unsynced "
+                f"seals)")
         for pkey, retired in pack_drops.items():
             self._repack_io(name, pkey, retired)
+        if cat_enabled and first_sweep:
+            # orphaned-pack sweep: a previous run's pack whose members are
+            # ALL known-dead (dropped above, or tombstoned by an earlier
+            # gc whose pack delete never completed) is deleted whole.
+            # Members of unknown fate keep the pack — a stale catalog must
+            # never cost live data.  Once per stream per process: THIS
+            # process's own retirements always resolve their pack keys via
+            # the catalog/_packed and go through the re-pack path above,
+            # so repeating the listing every steady-state gc buys nothing.
+            dead = set(drop) | set(cat_tombs)
+            with self._lock:
+                st2 = self._cat_state.get(name) or {}
+                dead |= set(st2.get("tombstones", ()))
+            # tombstones are version NUMBERS here, but packs only know
+            # numbers too — a LATER incarnation legitimately reusing a
+            # retired number is live, and a pack holding it must survive
+            dead -= live
+            swept_ok = True
+            for tier in self.external_tiers:
+                try:
+                    pkeys = tier.keys(fmt.pack_prefix(name))
+                except Exception:  # noqa: BLE001 — flaky tier: stay
+                    # unswept so the NEXT gc retries the whole sweep
+                    swept_ok = False
+                    continue
+                for pkey in pkeys:
+                    if pkey in pack_drops:
+                        continue  # already re-packed above
+                    reader = self._pack_reader(tier, name, pkey)
+                    if reader is None:
+                        continue  # torn: diagnosed, membership unknowable
+                    members = set(reader.versions)
+                    if members and members <= dead:
+                        self._repack_io(name, pkey, members)
+            if swept_ok:
+                self._gc_swept.add(name)
+        if cat_enabled:
+            # persist tombstones / adoptions now — gc already runs on the
+            # maintenance lane (or inline in sync mode, like gc itself)
+            self.sync_catalog(name)
 
     def _repack_io(self, name: str, skey: str, retired: set):
         """Maintenance-lane pack rewrite after GC retired some members:
@@ -1345,6 +1881,11 @@ class VelocClient:
         self._history.append(row)
         fut.add_done_callback(
             lambda f, row=row, ctx=ctx: self._resolve_history(row, f, ctx))
+        # catalog sync BEFORE gc: the first sweep of a brand-new stream
+        # should find the catalog already seeded instead of warning its way
+        # through the scan fallback (both run on the maintenance lane in
+        # submission order)
+        self._schedule_catalog_sync(version)
         if self.spec.keep_versions:
             self._schedule_gc(version)
         if not ctx.skipped and self.spec.compact_threshold:
@@ -1381,6 +1922,21 @@ class VelocClient:
                 lambda: self.cluster.gc(self.name, keep), coalesce=True)
         else:
             self.cluster.gc(self.name, keep)
+
+    def _schedule_catalog_sync(self, version: int):
+        """Persist pending durable-catalog updates for this stream.  Like
+        GC, the RMW is external-tier I/O: with an active backend it runs
+        as a coalesced, idle-gated maintenance task; sync mode runs it
+        inline.  A clean catalog makes this a no-op, so coalesced repeats
+        are cheap."""
+        if not self.cluster.catalog_tiers():
+            return
+        if self.backend is not None:
+            self.backend.submit_maintenance(
+                f"catalog:{self.name}:{self.rank}", version,
+                lambda: self.cluster.sync_catalog(self.name), coalesce=True)
+        else:
+            self.cluster.sync_catalog(self.name)
 
     def wait(self, version: Optional[int] = None, timeout: Optional[float] = None
              ) -> bool:
@@ -1616,6 +2172,14 @@ class VelocClient:
         except Exception as e:  # noqa: BLE001 — the batch stays retained in
             # cluster._seal_retry; versions remain L1/L2-protected
             _log.warning("final pack flush of %r failed: %s", self.name, e)
+        try:
+            # final catalog flush: a clean shutdown leaves the durable
+            # catalog exactly describing what is restorable where, so the
+            # next process plans its restart without any key scan
+            self.cluster.sync_catalog(self.name)
+        except Exception as e:  # noqa: BLE001 — state stays dirty; the
+            # next process falls back to scan discovery with a diagnostic
+            _log.warning("final catalog sync of %r failed: %s", self.name, e)
 
 
 def make_client(cfg: Optional[Union[PipelineSpec, VelocConfig]] = None,

@@ -68,6 +68,9 @@ class _Task:
     fn: Callable = field(compare=False)
     deadline: Optional[float] = field(compare=False, default=None)
     on_drop: Optional[Callable] = field(compare=False, default=None)
+    #: maintenance lane only: don't start before this monotonic time
+    #: (seal-retry exponential backoff); None = eligible immediately
+    not_before: Optional[float] = field(compare=False, default=None)
 
 
 class TaskError(Exception):
@@ -96,6 +99,7 @@ class ActiveBackend:
         self._running: list[tuple[str, int]] = []
         self._running_ckpt = 0  # checkpoint-lane tasks currently executing
         self._stop = False
+        self._draining = False  # shutdown in progress: backoffs collapse
         self._latest: dict[str, int] = {}  # kind -> newest version enqueued
         self._threads = [threading.Thread(target=self._worker, daemon=True,
                                           name=f"veloc-backend-{i}")
@@ -137,7 +141,8 @@ class ActiveBackend:
             cb()
 
     def submit_maintenance(self, kind: str, version: int, fn: Callable, *,
-                           priority: int = 90, coalesce: bool = False):
+                           priority: int = 90, coalesce: bool = False,
+                           delay_s: float = 0.0):
         """Queue low-priority background maintenance (delta-chain
         compaction, GC, segment re-seals, ...).  Maintenance never competes
         with checkpoints: a task is only popped while the checkpoint lanes
@@ -147,7 +152,13 @@ class ActiveBackend:
         ``coalesce=True`` deduplicates by task kind: queued (not running)
         older tasks of the same kind are dropped in favour of this one —
         idempotent sweeps like GC need at most one pending instance however
-        many checkpoints queued them while the lanes were busy."""
+        many checkpoints queued them while the lanes were busy.
+
+        ``delay_s`` defers the task's earliest start (seal-retry
+        exponential backoff: an external tier that is down for minutes must
+        not be hammered every maintenance window).  Ignored once the
+        backend is draining for shutdown — queued work then runs
+        immediately instead of holding the process open."""
         with self._cv:
             if self._stop:
                 raise RuntimeError("backend stopped")
@@ -161,29 +172,45 @@ class ActiveBackend:
                     self._maint = kept
                     heapq.heapify(self._maint)
             self._seq += 1
+            nb = time.monotonic() + delay_s \
+                if delay_s > 0 and not self._draining else None
             heapq.heappush(self._maint,
-                           _Task(priority, self._seq, version, kind, fn))
+                           _Task(priority, self._seq, version, kind, fn,
+                                 not_before=nb))
             self._latest[kind] = max(self._latest.get(kind, -1), version)
             self._cv.notify()
 
     def _pop_maintenance_locked(self) -> Optional[_Task]:
         if not self._maint or self._heap or self._running_ckpt:
             return None  # checkpoint lanes not idle
+        now = time.monotonic()
+        due = [t for t in self._maint
+               if t.not_before is None or t.not_before <= now]
+        if not due:
+            return None  # everything is backing off
         if self._maint_interval > 0 and self._maint_last is not None and \
-                time.monotonic() - self._maint_last < self._maint_interval:
+                now - self._maint_last < self._maint_interval:
             return None  # rate window not open yet
+        task = min(due)  # (priority, seq) — heap order among the due
+        self._maint.remove(task)
+        heapq.heapify(self._maint)
         self._maint_last = time.monotonic()
-        return heapq.heappop(self._maint)
+        return task
 
     def _idle_wait_locked(self) -> Optional[float]:
-        """How long to wait for work: the rate-window remainder when only a
-        rate-limited maintenance task is pending, else indefinitely (woken
+        """How long to wait for work: the backoff / rate-window remainder
+        when only deferred maintenance is pending, else indefinitely (woken
         by submit / completion / shutdown notifies)."""
-        if self._maint and not self._heap and not self._running_ckpt and \
-                self._maint_interval > 0 and self._maint_last is not None:
-            return max(
-                0.01,
-                self._maint_last + self._maint_interval - time.monotonic())
+        if not self._maint or self._heap or self._running_ckpt:
+            return None
+        now = time.monotonic()
+        due = [t for t in self._maint
+               if t.not_before is None or t.not_before <= now]
+        if not due:
+            return max(0.01, min(t.not_before for t in self._maint) - now)
+        if self._maint_interval > 0 and self._maint_last is not None:
+            return max(0.01,
+                       self._maint_last + self._maint_interval - now)
         return None
 
     def _worker(self):
@@ -276,9 +303,12 @@ class ActiveBackend:
 
     def shutdown(self, wait: bool = True):
         with self._cv:
-            # draining must not sit out the maintenance rate window — run
-            # whatever is still queued immediately
+            # draining must not sit out the maintenance rate window or a
+            # seal-retry backoff — run whatever is still queued immediately
             self._maint_interval = 0.0
+            self._draining = True
+            for t in self._maint:
+                t.not_before = None
             self._cv.notify_all()
         if wait:
             self.wait()

@@ -313,6 +313,80 @@ class PackReader(SegmentReader):
 
 
 # ---------------------------------------------------------------------------
+# durable stream catalog
+# ---------------------------------------------------------------------------
+
+CATALOG_MAGIC = b"VCATJX1\x00"
+#: bump when the catalog record layout changes; decoders refuse unknown
+#: schemas loudly instead of guessing.
+CATALOG_SCHEMA = 1
+_CATALOG_DIGEST_LEN = 24
+
+
+def catalog_key(name: str) -> str:
+    """Key of the stream's durable catalog blob.  Like pack keys it lives
+    OUTSIDE every version prefix (``version_prefix``), so per-version
+    prefix GC can never delete it."""
+    return f"{name}/catalog"
+
+
+def encode_catalog(name: str, versions: dict, tombstones=(), *,
+                   gen: int = 1, writer: str = "") -> bytes:
+    """One small digest-framed blob persisting a stream's durability state.
+
+    ``versions`` maps version number -> record: ``kind`` ("full"/"delta"),
+    ``parent`` link, ``sealed`` state, ``location``
+    ("direct"/"segment"/"pack"), the ``pack`` key + ``entries`` set for
+    packed versions, completed ``levels``, and the writing run's ``stamp``
+    (its incarnation identity — a later run may legitimately reuse the
+    version number).  ``tombstones`` is an iterable of ``(version, stamp)``
+    retirement markers: a record whose stamp matches a tombstone is dead
+    and must never be resurrected by a concurrent read-modify-write.
+    ``gen`` is the monotonically increasing write generation used by RMW
+    staleness checks.  Layout: MAGIC + body digest + JSON body."""
+    recs = {}
+    for v, rec in versions.items():
+        r = dict(rec)
+        if r.get("entries") is not None:
+            r["entries"] = sorted(r["entries"])
+        recs[str(int(v))] = r
+    body = json.dumps(
+        {"schema": CATALOG_SCHEMA, "name": name, "gen": int(gen),
+         "writer": writer, "versions": recs,
+         "tombstones": [[int(v), str(s)] for v, s in tombstones]},
+        sort_keys=True).encode()
+    return CATALOG_MAGIC + kops.digest(body).encode("ascii") + body
+
+
+def decode_catalog(blob: bytes) -> dict:
+    """Parse a catalog blob; version keys come back as ints.
+
+    Strict by design: bad magic, a digest mismatch (torn or corrupt
+    write), unparseable JSON or an unknown schema all raise IOError — a
+    damaged catalog must make the caller fall back to scan discovery, not
+    silently drop versions from GC's or restart's view."""
+    blob = bytes(blob)
+    head = len(CATALOG_MAGIC)
+    if len(blob) < head + _CATALOG_DIGEST_LEN or blob[:head] != CATALOG_MAGIC:
+        raise IOError("bad catalog magic")
+    want = blob[head:head + _CATALOG_DIGEST_LEN].decode("ascii", "replace")
+    body = blob[head + _CATALOG_DIGEST_LEN:]
+    if kops.digest(bytes(body)) != want:
+        raise IOError("catalog digest mismatch (torn or corrupt write)")
+    try:
+        d = json.loads(body.decode())
+    except Exception as e:  # noqa: BLE001 — any parse failure = corrupt
+        raise IOError(f"catalog body unparseable: {e}") from None
+    if not isinstance(d, dict) or d.get("schema") != CATALOG_SCHEMA:
+        found = d.get("schema") if isinstance(d, dict) else None
+        raise IOError(f"unsupported catalog schema {found!r} "
+                      f"(this reader speaks schema {CATALOG_SCHEMA})")
+    d["versions"] = {int(v): rec for v, rec in d.get("versions", {}).items()}
+    d["tombstones"] = [[int(v), str(s)] for v, s in d.get("tombstones", [])]
+    return d
+
+
+# ---------------------------------------------------------------------------
 # append-only log records (KV journal)
 # ---------------------------------------------------------------------------
 

@@ -371,11 +371,17 @@ class FlushModule(Module):
     priority = 40
     level = "L3"
 
-    def __init__(self, chunk_bytes: int = 4 << 20, seal_retries: int = 0):
+    def __init__(self, chunk_bytes: int = 4 << 20, seal_retries: int = 0,
+                 seal_backoff_base: float = 0.25,
+                 seal_backoff_cap: float = 15.0):
         self.chunk_bytes = chunk_bytes
         #: failed segment/pack seals schedule up to this many maintenance-
         #: lane re-seals from the retained batch (needs an active backend)
         self.seal_retries = seal_retries
+        #: re-seal N waits base * 2**N seconds (capped) — see
+        #: Cluster.schedule_seal_retry
+        self.seal_backoff_base = seal_backoff_base
+        self.seal_backoff_cap = seal_backoff_cap
 
     def _schedule_retries(self, ctx, *, failed: bool):
         """Queue maintenance-lane re-seals for every retained failed-seal
@@ -386,7 +392,9 @@ class FlushModule(Module):
         if backend is None:
             return
         scheduled = ctx.cluster.schedule_seal_retry(
-            backend, ctx.name, self.seal_retries)
+            backend, ctx.name, self.seal_retries,
+            backoff_base=self.seal_backoff_base,
+            backoff_cap=self.seal_backoff_cap)
         if failed or scheduled:
             ctx.results["l3_seal_retry_scheduled"] = scheduled
 

@@ -133,6 +133,12 @@ class PipelineSpec:
     #: tier recovers (0 = a failed seal stays failed until GC).  Forwarded
     #: into the flush module unless its ModuleSpec sets it explicitly.
     seal_retries: int = 0
+    #: re-seal attempt N starts no earlier than ``base * 2**N`` seconds
+    #: after scheduling (capped below) — exponential backoff so a tier that
+    #: is down for minutes is probed a handful of times, not hammered every
+    #: maintenance window.  0 = legacy maintenance_interval_s-only spacing.
+    seal_backoff_base_s: float = 0.25
+    seal_backoff_cap_s: float = 15.0
     #: delta-chain depth that triggers automatic compaction (0 = manual
     #: ``client.compact()`` only)
     compact_threshold: int = 0
@@ -163,9 +169,16 @@ class PipelineSpec:
         out = []
         for ms in self.modules:
             options = ms.options
-            if ms.name == "flush" and self.seal_retries \
-                    and "seal_retries" not in options:
-                options = dict(options, seal_retries=self.seal_retries)
+            if ms.name == "flush":
+                extra = {}
+                if self.seal_retries and "seal_retries" not in options:
+                    extra["seal_retries"] = self.seal_retries
+                if "seal_backoff_base" not in options:
+                    extra["seal_backoff_base"] = self.seal_backoff_base_s
+                if "seal_backoff_cap" not in options:
+                    extra["seal_backoff_cap"] = self.seal_backoff_cap_s
+                if extra:
+                    options = dict(options, **extra)
             mod = MODULES.create(ms.name, **options)
             if ms.priority is not None:
                 mod.priority = ms.priority

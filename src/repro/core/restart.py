@@ -17,16 +17,77 @@ from repro.core import format as fmt
 _LEVEL_ORDER = {"L1": 0, "L2": 1, "L3": 2}
 
 
-def find_restart(cluster, name: str) -> list[dict]:
-    """Candidate (version, best-level) descending by version."""
+def _best_level_candidates(manifests: list[dict]) -> list[dict]:
     byver: dict[int, dict] = {}
-    for m in cluster.manifests(name):
+    for m in manifests:
         v = m["version"]
         cur = byver.get(v)
         if cur is None or _LEVEL_ORDER.get(m["level"], 9) < \
                 _LEVEL_ORDER.get(cur["level"], 9):
             byver[v] = m
     return [byver[v] for v in sorted(byver, reverse=True)]
+
+
+def find_restart(cluster, name: str) -> list[dict]:
+    """Candidate (version, best-level) descending by version.  Discovery is
+    catalog-first when the cluster has a durable stream catalog (see
+    ``Cluster.manifests``): the version set and pack locations come from
+    one catalog blob per tier, costing zero ``keys()`` listings; a missing
+    or torn catalog degrades to the key-scan with a diagnostic."""
+    return _best_level_candidates(cluster.manifests(name))
+
+
+def plan_restart(cluster, name: str) -> dict:
+    """Catalog-first restart planner: everything a restore needs to know
+    BEFORE fetching a single shard byte.
+
+    Returns ``{"mode", "candidates", "chains", "packs"}``:
+
+      mode        "catalog" when a durable stream catalog drove discovery
+                  (O(1) key listings per (tier, stream) — in fact zero),
+                  "scan" when discovery fell back to key listings.
+      candidates  ``find_restart``'s (version, best-level) manifest list.
+      chains      version -> its delta chain ``[v, parent, ..., full
+                  base]``, resolved from manifest parent links without
+                  touching any shard; a cyclic / overlong / dangling chain
+                  maps to None (that candidate will need per-level
+                  fallback at load time).
+      packs       version -> rolling-pack key, for versions whose L3
+                  entries live in a shared pack (loading the plan seeds
+                  the cluster's pack-membership index, so subsequent
+                  fetches skip the per-(tier, stream) key scan).
+    """
+    loader = getattr(cluster, "load_catalog", None)
+    cat = loader(name) if loader is not None else None
+    mlist = cluster.manifests(name)
+    cands = _best_level_candidates(mlist)
+    parents: dict[int, Optional[int]] = {}
+    for m in mlist:
+        if parents.get(m["version"]) is None:
+            parents[m["version"]] = m.get("parent")
+    kinds: dict[int, str] = {}
+    packs: dict[int, str] = {}
+    if cat is not None:
+        for v, rec in cat["versions"].items():
+            parents.setdefault(v, rec.get("parent"))
+            kinds[v] = rec.get("kind", "full")
+            if rec.get("pack"):
+                packs[v] = rec["pack"]
+    known = {m["version"] for m in mlist} | set(parents)
+    chains: dict[int, Optional[list[int]]] = {}
+    for c in cands:
+        chain = []
+        v: Optional[int] = c["version"]
+        ok = True
+        while v is not None:
+            if v in chain or len(chain) >= MAX_CHAIN_DEPTH or v not in known:
+                ok = False
+                break
+            chain.append(int(v))
+            v = parents.get(v)
+        chains[c["version"]] = chain if ok else None
+    return {"mode": "catalog" if cat is not None else "scan",
+            "candidates": cands, "chains": chains, "packs": packs}
 
 
 def _manifest_for(cluster, name, version) -> Optional[dict]:

@@ -65,6 +65,11 @@ class TierInfo:
     #: version (the plain aggregated path).  Delta versions waiting in an
     #: open pack are L1/L2-protected only until the pack seals.
     pack_versions: int = 0
+    #: durable stream catalog: this tier holds one small digest-framed
+    #: catalog blob per stream (repro.core.format.encode_catalog) recording
+    #: every externally visible version's kind/parent/seal/pack state —
+    #: what makes GC restart-safe and restart planning O(1) key listings.
+    catalog: bool = False
 
 
 class StorageTier:
@@ -75,6 +80,8 @@ class StorageTier:
         self._lock = threading.Lock()
         self._inflight = 0  # concurrent writers (producer-consumer pressure)
         self.put_calls = 0  # lifetime put count (small-write accounting)
+        self.keys_calls = 0  # lifetime keys() listings (restart-planning
+        #                      accounting: catalog-first restart needs zero)
 
     # -- accounting used by pick_tier ------------------------------------
     def busy(self) -> int:
@@ -103,6 +110,13 @@ class StorageTier:
         raise NotImplementedError
 
     def keys(self, prefix: str = "") -> list[str]:
+        """List keys under ``prefix``.  Counted in ``keys_calls`` so the
+        restart planner's O(versions) -> O(1) listing claim is auditable;
+        subclasses implement ``_keys``."""
+        self.keys_calls += 1
+        return self._keys(prefix)
+
+    def _keys(self, prefix: str = "") -> list[str]:
         raise NotImplementedError
 
     def wipe(self) -> None:
@@ -133,16 +147,18 @@ class DRAMTier(StorageTier):
     def delete(self, key):
         self._store.pop(key, None)
 
-    def keys(self, prefix=""):
+    def _keys(self, prefix=""):
         return [k for k in self._store if k.startswith(prefix)]
 
 
 class FileTier(StorageTier):
     def __init__(self, root: str, name="file", gbps=5.0, persistent=True,
-                 node_local=False, aggregate=False, pack_versions=0):
+                 node_local=False, aggregate=False, pack_versions=0,
+                 catalog=False):
         super().__init__(TierInfo(name, "file", gbps, persistent, node_local,
                                   aggregate=aggregate,
-                                  pack_versions=pack_versions))
+                                  pack_versions=pack_versions,
+                                  catalog=catalog))
         self.root = root
         os.makedirs(root, exist_ok=True)
 
@@ -177,7 +193,7 @@ class FileTier(StorageTier):
         except FileNotFoundError:
             pass
 
-    def keys(self, prefix=""):
+    def _keys(self, prefix=""):
         safe = escape_key(prefix)
         return [unescape_key(f) for f in os.listdir(self.root)
                 if f.startswith(safe) and not f.endswith(".tmp")]
@@ -212,10 +228,11 @@ class KVTier(StorageTier):
 
     def __init__(self, name="kv", gbps=20.0, journal: Optional[str] = None,
                  compact_every: int = 512, aggregate: bool = False,
-                 pack_versions: int = 0):
+                 pack_versions: int = 0, catalog: bool = False):
         super().__init__(TierInfo(name, "kv", gbps, persistent=journal is not None,
                                   node_local=False, aggregate=aggregate,
-                                  pack_versions=pack_versions))
+                                  pack_versions=pack_versions,
+                                  catalog=catalog))
         self._store: dict[str, bytes] = {}
         self._journal = journal
         self._compact_every = compact_every
@@ -367,7 +384,7 @@ class KVTier(StorageTier):
         if self._journal and existed:
             self._append_record(key, None)  # tombstone
 
-    def keys(self, prefix=""):
+    def _keys(self, prefix=""):
         return [k for k in self._store if k.startswith(prefix)]
 
 
@@ -396,6 +413,8 @@ class TierSpec:
     #: cross-version packing width (see TierInfo.pack_versions); only
     #: meaningful together with ``aggregate=True``
     pack_versions: int = 0
+    #: this tier holds the durable stream catalog (see TierInfo.catalog)
+    catalog: bool = False
     options: dict = field(default_factory=dict)
 
     def resolved_name(self, rank: Optional[int] = None) -> str:
@@ -465,7 +484,7 @@ def _build_file(spec: TierSpec, *, scratch: str, rank: Optional[int] = None):
     return FileTier(os.path.join(scratch, sub), name=spec.resolved_name(rank),
                     gbps=spec.gbps, persistent=spec.persistent,
                     node_local=spec.node_local, aggregate=spec.aggregate,
-                    pack_versions=spec.pack_versions)
+                    pack_versions=spec.pack_versions, catalog=spec.catalog)
 
 
 @register_tier("kv")
@@ -476,7 +495,7 @@ def _build_kv(spec: TierSpec, *, scratch: str, rank: Optional[int] = None):
             scratch, journal.format(rank="" if rank is None else rank))
     return KVTier(name=spec.resolved_name(rank), gbps=spec.gbps,
                   journal=journal, aggregate=spec.aggregate,
-                  pack_versions=spec.pack_versions,
+                  pack_versions=spec.pack_versions, catalog=spec.catalog,
                   compact_every=spec.options.get("compact_every", 512))
 
 
@@ -510,6 +529,48 @@ class TierTopology:
 
     def build_external(self) -> list[StorageTier]:
         return [TIERS.create(s, scratch=self.scratch) for s in self.external]
+
+
+# ---------------------------------------------------------------------------
+# durable stream catalog helpers
+# ---------------------------------------------------------------------------
+
+
+def read_catalog(tier: StorageTier, name: str):
+    """Fetch + decode the stream's durable catalog from one tier.
+
+    Returns ``(catalog, error)``: ``(dict, None)`` on success, ``(None,
+    None)`` when the tier simply holds no catalog, and ``(None, "...")``
+    when the blob is torn/corrupt/unreadable — the error string is the
+    caller's diagnostic, and the caller MUST treat it as
+    catalog-unavailable (scan fallback), never as an empty catalog."""
+    from repro.core import format as fmt
+
+    try:
+        blob = tier.get(fmt.catalog_key(name))
+    except Exception as e:  # noqa: BLE001 — flaky tier reads as unreadable
+        return None, f"{type(e).__name__}: {e}"
+    if blob is None:
+        return None, None
+    try:
+        cat = fmt.decode_catalog(blob)
+    except Exception as e:  # noqa: BLE001 — torn/corrupt/unknown-schema
+        return None, f"{type(e).__name__}: {e}"
+    if cat.get("name") != name:
+        return None, f"catalog names {cat.get('name')!r}, expected {name!r}"
+    return cat, None
+
+
+def write_catalog(tier: StorageTier, name: str, versions: dict,
+                  tombstones=(), *, gen: int = 1, writer: str = "") -> bytes:
+    """Encode + publish one stream catalog blob; returns the bytes written
+    (so read-modify-write callers can verify their write landed)."""
+    from repro.core import format as fmt
+
+    blob = fmt.encode_catalog(name, versions, tombstones, gen=gen,
+                              writer=writer)
+    tier.put(fmt.catalog_key(name), blob)
+    return blob
 
 
 class WriteBatch:

@@ -32,7 +32,9 @@ class WrappedTier(StorageTier):
     def delete(self, key):
         return self.inner.delete(key)
 
-    def keys(self, prefix=""):
+    def _keys(self, prefix=""):
+        # route through inner.keys() so the wrapped tier's keys_calls
+        # accounting still observes listings made through the wrapper
         return self.inner.keys(prefix)
 
 

@@ -1,6 +1,7 @@
 """Property-based round-trips (hypothesis): shard serialize/read across
-encodings and dtypes, and delta encode/overlay under randomized dirty
-masks — byte-identical or an error, never silent corruption."""
+encodings and dtypes, delta encode/overlay under randomized dirty masks,
+and the durable stream catalog container — byte-identical or an error,
+never silent corruption."""
 import numpy as np
 import pytest
 
@@ -112,6 +113,59 @@ def test_delta_region_through_shard_container(data, n, chunk_words):
     assert reader.read("w", base=base).tobytes() == new.tobytes()
     assert reader.read("o").tobytes() == other.tobytes()
     assert reader.read_patch("w").base_version == 7
+
+
+_CAT_RECORD = st.fixed_dictionaries({
+    "kind": st.sampled_from(["full", "delta"]),
+    "parent": st.none() | st.integers(0, 10**6),
+    "sealed": st.booleans(),
+    "location": st.sampled_from(["direct", "segment", "pack"]),
+    "pack": st.none() | st.text(min_size=1, max_size=24),
+    "entries": st.none() | st.lists(st.text(max_size=16), max_size=6),
+    "levels": st.lists(st.sampled_from(["L1", "L2", "L3"]), unique=True),
+    "stamp": st.text(max_size=16),
+})
+
+
+@settings(max_examples=30, deadline=None)
+@given(versions=st.dictionaries(st.integers(0, 10**8), _CAT_RECORD,
+                                max_size=8),
+       tombstones=st.lists(st.tuples(st.integers(0, 10**8),
+                                     st.text(max_size=16)), max_size=6),
+       gen=st.integers(1, 10**9),
+       name=st.text(min_size=1, max_size=24))
+def test_catalog_roundtrip_property(versions, tombstones, gen, name):
+    """Durable stream catalog: encode/decode is the identity (modulo the
+    canonical sorted form of entry sets and int version keys)."""
+    blob = fmt.encode_catalog(name, versions, tombstones, gen=gen,
+                              writer="w")
+    dec = fmt.decode_catalog(blob)
+    assert dec["name"] == name and dec["gen"] == gen
+    assert set(dec["versions"]) == set(versions)
+    for v, rec in versions.items():
+        want = dict(rec)
+        if want["entries"] is not None:
+            want["entries"] = sorted(want["entries"])
+        assert dec["versions"][v] == want
+    assert dec["tombstones"] == [[v, s] for v, s in tombstones]
+
+
+@settings(max_examples=40, deadline=None)
+@given(versions=st.dictionaries(st.integers(0, 10**8), _CAT_RECORD,
+                                min_size=1, max_size=6),
+       flip=st.integers(0, 10**6),
+       cut=st.integers(1, 10**6))
+def test_catalog_corruption_never_silent(versions, flip, cut):
+    """Flipping any byte — or truncating at any point — of an encoded
+    catalog raises IOError at decode; a torn catalog can never silently
+    drop versions from GC's or restart's view."""
+    blob = fmt.encode_catalog("s", versions, [[0, "t"]], gen=3, writer="w")
+    flipped = bytearray(blob)
+    flipped[flip % len(blob)] ^= 0x01
+    with pytest.raises(IOError):
+        fmt.decode_catalog(bytes(flipped))
+    with pytest.raises(IOError):
+        fmt.decode_catalog(blob[:cut % len(blob)])
 
 
 @settings(max_examples=15, deadline=None)
