@@ -32,6 +32,11 @@ scale with the scaling factor stated in the ``derived`` column.
                   listings per restart; the catalog needs none).
   bench_scale     modeled weak-scaling of the L3 flush under shared-PFS
                   bandwidth (flush contention), from the storage model.
+  bench_lock_overhead  runtime concurrency checker cost: tracked-lock
+                  acquire/release vs raw threading.Lock (disabled must be
+                  <1% of flush latency), end-to-end flush wall time with
+                  the checker off vs on, and per-lock contention /
+                  hold-time stats (the BENCH_locks.json artifact).
 
 ``--json FILE`` additionally writes the rows as JSON (the perf-trajectory
 artifact CI archives); ``--only SUBSTR[,SUBSTR...]`` filters which
@@ -479,9 +484,107 @@ def bench_scale():
             f"async_hides={t_l3 / max(t_l1, 1e-9):.0f}x")
 
 
+def bench_lock_overhead():
+    """Cost of the runtime concurrency checker (repro.core.concurrency).
+
+    The tracked primitives replace every lock in the hot flush path, so
+    their *disabled* cost must be noise: measured as raw-vs-tracked
+    acquire/release micro cost, then scaled by the actual per-checkpoint
+    acquisition count into a percentage of flush latency (must be <1%).
+    The *enabled* cost (test suites, debugging) is reported alongside,
+    with the per-lock contention/hold-time stats the checker collects."""
+    import threading
+
+    from repro.core import concurrency
+    from repro.core.api import Cluster, VelocClient, VelocConfig
+    from repro.core.concurrency import TrackedLock
+
+    was_active = concurrency.is_active()
+    concurrency.disable()
+    # -- micro: acquire/release -----------------------------------------
+    n_spin = 50_000
+    raw = threading.Lock()
+    tracked = TrackedLock("bench.lock", concurrency.RANK_GUARD)
+
+    def spin(lk):
+        def run():
+            for _ in range(n_spin):
+                with lk:
+                    pass
+        return run
+
+    us_raw = _timeit(spin(raw), n=3)
+    us_off = _timeit(spin(tracked), n=3)
+    concurrency.reset()
+    concurrency.enable("warn")
+    us_on = _timeit(spin(tracked), n=3)
+    concurrency.disable()
+    per_raw, per_off, per_on = (u / n_spin for u in (us_raw, us_off, us_on))
+    row("lock_acquire_raw", per_raw, f"{n_spin}x acquire/release")
+    row("lock_acquire_tracked_off", per_off,
+        f"delta={per_off - per_raw:+.3f}us_vs_raw")
+    row("lock_acquire_tracked_on", per_on,
+        f"delta={per_on - per_raw:+.3f}us_vs_raw")
+
+    # -- e2e: flush wall time, checker off vs on ------------------------
+    def build(tag):
+        root = f"/tmp/veloc_bench_locks_{tag}"
+        shutil.rmtree(root, ignore_errors=True)
+        cfg = VelocConfig(scratch=root, mode="sync", partner=False,
+                          xor_group=0, flush=True, aggregate=True,
+                          keep_versions=50)
+        cluster = Cluster(cfg, nranks=1)
+        return cfg, cluster, VelocClient(cfg, cluster, rank=0)
+
+    n, nv = 200_000, 8
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal(n).astype(np.float32)
+
+    def drive(client):
+        w = base.copy()
+        t0 = time.perf_counter()
+        for v in range(1, nv + 1):
+            w[v * 100:v * 100 + 1000] += 1.0
+            client.checkpoint({"w": w}, version=v, device_snapshot=False)
+        return (time.perf_counter() - t0) / nv * 1e6  # us/checkpoint
+
+    _, _, client_warm = build("warm")
+    drive(client_warm)  # one-time import/JIT costs land here, not in "off"
+    _, _, client_off = build("off")
+    us_flush_off = drive(client_off)
+    concurrency.reset()
+    concurrency.enable("warn")
+    _, _, client_on = build("on")
+    us_flush_on = drive(client_on)
+    stats = concurrency.lock_stats()
+    concurrency.disable()
+
+    acq = sum(s["acquisitions"] for s in stats.values())
+    contended = sum(s["contentions"] for s in stats.values())
+    hot = max(stats, key=lambda k: stats[k]["hold_s"]) if stats else "-"
+    # projected cost of the DISABLED tracker in the flush path: observed
+    # acquisitions per checkpoint x per-acquire overhead vs raw locks
+    est_pct = (acq / nv) * (per_off - per_raw) / us_flush_off * 100.0
+    row("lock_flush_tracker_off", us_flush_off,
+        f"est_disabled_overhead={est_pct:.3f}%_of_flush"
+        f"{'' if abs(est_pct) < 1.0 else ',EXCEEDS_1%_BUDGET'}")
+    row("lock_flush_tracker_on", us_flush_on,
+        f"overhead={(us_flush_on / max(us_flush_off, 1e-9) - 1) * 100:.1f}%,"
+        f"acquisitions={acq},contended={contended},hottest={hot}")
+    for name in sorted(stats):
+        s = stats[name]
+        row(f"lock_stats[{name}]", s["hold_s"] * 1e6 / max(nv, 1),
+            f"acq={s['acquisitions']},contended={s['contentions']},"
+            f"wait_s={s['wait_s']},hold_max_s={s['hold_max_s']}")
+    concurrency.reset()
+    if was_active:
+        concurrency.enable("raise")
+
+
 ALL_BENCHES = (bench_levels, bench_engine, bench_erasure, bench_capture,
                bench_async, bench_delta, bench_aggregation, bench_packing,
-               bench_restart, bench_interval, bench_scale)
+               bench_restart, bench_interval, bench_scale,
+               bench_lock_overhead)
 
 
 def main(argv=None) -> None:

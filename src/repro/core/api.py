@@ -25,12 +25,12 @@ the external flush all run in the ActiveBackend.
 from __future__ import annotations
 
 import logging
-import threading
 import time
 import uuid
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Union
 
+from repro.core import concurrency
 from repro.core import format as fmt
 from repro.core.backend import ActiveBackend, RateLimiter
 from repro.core.capture import iter_host_regions, snapshot_device, tree_from_regions
@@ -194,7 +194,11 @@ class Cluster:
         #: client's PipelineSpec), else the explicit on/off switch.  Takes
         #: effect only on external tiers whose TierInfo opted in.
         self.aggregate = aggregate
-        self._lock = threading.Lock()
+        # THE cluster lock: protects registry/meta/batch state.  Declared
+        # io_forbidden — the runtime checker (repro.core.concurrency)
+        # raises if any external-tier put/get/delete/keys runs under it.
+        self._lock = concurrency.TrackedLock(
+            "cluster._lock", concurrency.RANK_CLUSTER, io_forbidden=True)
         self._node_tiers = [topology.build_node(r) for r in range(nranks)]
         self.external_tiers: list[StorageTier] = topology.build_external()
         self.rate_limiter = RateLimiter(rate_limit_bps)
@@ -228,10 +232,14 @@ class Cluster:
         #: ``_batches`` so later manifest/compaction writes publish directly
         #: instead of silently staging into a dead batch.
         self._seal_retry: dict[str, dict] = {}
-        self._vlocks: dict[tuple, threading.Lock] = {}  # per-version rewrite
-        self._plocks: dict[str, threading.Lock] = {}  # per-pack rewrite
-        self._plock_guard = threading.Lock()
-        self._seg_lock = threading.Lock()
+        #: per-version rewrite locks (rank VERSION: nested inside the
+        #: cluster lock, outside pack locks and _seg_lock)
+        self._vlocks: dict[tuple, concurrency.TrackedLock] = {}
+        self._plocks: dict[str, concurrency.TrackedLock] = {}  # per-pack
+        self._plock_guard = concurrency.TrackedLock(
+            "cluster._plock_guard", concurrency.RANK_GUARD)
+        self._seg_lock = concurrency.TrackedLock(
+            "cluster._seg_lock", concurrency.RANK_GUARD)
         self._segcache: dict[tuple, fmt.SegmentReader] = {}
         #: torn / corrupt segments observed while reading (restart surfaces
         #: these per candidate instead of silently decoding garbage)
@@ -248,8 +256,12 @@ class Cluster:
         self._cat_state: dict[str, dict] = {}
         self._cat_dirty: set = set()  # streams with unpersisted updates
         self._cat_cache: dict[str, dict] = {}  # merged on-disk view
-        self._cat_locks: dict[str, threading.Lock] = {}  # per-stream RMW
-        self._cat_guard = threading.Lock()
+        #: per-stream catalog RMW locks (rank CATALOG: outermost — a
+        #: catalog RMW must never be entered while the cluster lock is
+        #: held, the PR-5 inversion)
+        self._cat_locks: dict[str, concurrency.TrackedLock] = {}
+        self._cat_guard = concurrency.TrackedLock(
+            "cluster._cat_guard", concurrency.RANK_GUARD)
         #: torn / missing / raced catalog blobs observed (operators +
         #: tests see WHY the scan fallback engaged)
         self.catalog_diagnostics: list[dict] = []
@@ -440,9 +452,13 @@ class Cluster:
             f"no healthy catalog blob; {context} fell back to key-scan "
             f"discovery")
 
-    def _cat_lock(self, name: str) -> threading.Lock:
+    def _cat_lock(self, name: str) -> concurrency.TrackedLock:
         with self._cat_guard:
-            return self._cat_locks.setdefault(name, threading.Lock())
+            lk = self._cat_locks.get(name)
+            if lk is None:
+                lk = self._cat_locks[name] = concurrency.TrackedLock(
+                    f"cluster._cat_locks[{name}]", concurrency.RANK_CATALOG)
+            return lk
 
     def _cat_note_locked(self, name: str, version: int, *,
                          level: Optional[str] = None,
@@ -991,23 +1007,32 @@ class Cluster:
         return len(jobs)
 
     def _version_rewrite_lock_locked(self, name: str, version: int
-                                     ) -> threading.Lock:
+                                     ) -> concurrency.TrackedLock:
         """Per-version rewrite lock (cluster lock must be held to fetch).
         Segment read-modify-writes serialize on THIS lock and run with the
         global lock released — maintenance-lane compaction of one version
         must not stall every rank's staging/notes behind external I/O
         (lock order: cluster lock -> version lock -> pack lock ->
         _seg_lock)."""
-        return self._vlocks.setdefault((name, version), threading.Lock())
+        lk = self._vlocks.get((name, version))
+        if lk is None:
+            lk = self._vlocks[(name, version)] = concurrency.TrackedLock(
+                f"cluster._vlocks[{name}:v{version}]",
+                concurrency.RANK_VERSION)
+        return lk
 
-    def _pack_lock(self, skey: str) -> threading.Lock:
+    def _pack_lock(self, skey: str) -> concurrency.TrackedLock:
         """Per-pack rewrite lock: a rolling segment is shared by several
         versions, so their rewrites (compaction, GC re-pack) serialize on
         the PACK, not just the version.  Guarded by its own tiny lock (not
         the cluster lock) so it is reachable from paths that already hold
         the cluster lock."""
         with self._plock_guard:
-            return self._plocks.setdefault(skey, threading.Lock())
+            lk = self._plocks.get(skey)
+            if lk is None:
+                lk = self._plocks[skey] = concurrency.TrackedLock(
+                    f"cluster._plocks[{skey}]", concurrency.RANK_PACK)
+            return lk
 
     def _stage_into_batch_locked(self, name: str, version: int,
                                  repl: dict[str, bytes]) -> bool:
@@ -1558,7 +1583,7 @@ class Cluster:
             # and visible to catalog-first restarts, instead of leaking
             # on every tier forever
             scan_manifests = self._manifests_scan(name)
-        drops: list[tuple[int, Optional[threading.Lock]]] = []
+        drops: list[tuple[int, Optional[concurrency.TrackedLock]]] = []
         pack_drops: dict[str, set] = {}
         with self._lock:
             parents: dict[int, Optional[int]] = {}
@@ -1805,7 +1830,8 @@ class VelocClient:
                 rate_limiter=self.cluster.rate_limiter,
                 phase_gate=self.cluster.phase_gate,
                 maintenance_interval_s=spec.maintenance_interval_s)
-        self._compact_lock = threading.Lock()
+        self._compact_lock = concurrency.TrackedLock(
+            "client._compact_lock", concurrency.RANK_CLIENT)
         self._compact_pending = False
         self.engine = spec.compile(backend=self.backend)
         self._history: list[dict] = []

@@ -28,7 +28,9 @@ import threading
 import time
 import traceback
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
+
+from repro.core import concurrency
 
 
 class RateLimiter:
@@ -41,7 +43,8 @@ class RateLimiter:
         self._tokens = (bytes_per_sec or 0) * burst
         self._last = clock()
         self._clock, self._sleep = clock, sleep
-        self._lock = threading.Lock()
+        self._lock = concurrency.TrackedLock(
+            "backend.rate_limiter._lock", concurrency.RANK_GUARD)
 
     def acquire(self, nbytes: int):
         if self.rate is None:
@@ -90,7 +93,8 @@ class ActiveBackend:
         self._maint_interval = maintenance_interval_s
         self._maint_last: Optional[float] = None  # last maintenance start
         self._seq = 0
-        self._cv = threading.Condition()
+        self._cv = concurrency.TrackedCondition(
+            "backend._cv", concurrency.RANK_BACKEND)
         self._done: dict[tuple[str, int], str] = {}  # (kind, version) -> status
         self._errors: list[str] = []
         #: exact in-flight tasks; status() reports "running" only for pairs
@@ -282,11 +286,28 @@ class ActiveBackend:
                 self._cv.wait(remaining if remaining is not None else 0.2)
         return True
 
-    def status(self, kind: str, version: int) -> str:
-        """Exact task state: "queued" | "running" | a terminal status
-        ("done"/"error"/"superseded"/"deadline-miss") | "unknown" (never
-        submitted).  In-flight (kind, version) pairs are tracked precisely —
-        a busy worker no longer makes every unrelated pair read "running"."""
+    def status(self, kind: Optional[str] = None,
+               version: Optional[int] = None) -> Union[str, dict]:
+        """With (kind, version): exact task state — "queued" | "running" |
+        a terminal status ("done"/"error"/"superseded"/"deadline-miss") |
+        "unknown" (never submitted).  In-flight pairs are tracked precisely
+        — a busy worker no longer makes every unrelated pair read
+        "running".
+
+        With no arguments: a backend-wide snapshot dict (queue depths,
+        in-flight tasks, error count) including per-lock
+        contention/hold-time stats from the runtime concurrency checker
+        (``locks`` is empty unless the checker is enabled)."""
+        if kind is None and version is None:
+            with self._cv:
+                snap = {"queued": len(self._heap),
+                        "maintenance": len(self._maint),
+                        "running": list(self._running),
+                        "errors": len(self._errors)}
+            snap["locks"] = concurrency.lock_stats()
+            return snap
+        if kind is None or version is None:
+            raise TypeError("status() takes both kind and version, or neither")
         with self._cv:
             if (kind, version) in self._done:
                 return self._done[(kind, version)]

@@ -84,8 +84,8 @@ class Engine:
         rest = [m for m in self.modules if m.priority > self.blocking_cut]
         try:
             self._run(front, ctx, future)
-        except Exception as e:
-            if future is not None:
+        except Exception as e:  # noqa: BLE001 — routed into the future,
+            if future is not None:   # then re-raised to the caller
                 future._finish(e)
             raise
         ctx.results["blocking_s"] = time.monotonic() - ctx.t_begin
@@ -96,7 +96,7 @@ class Engine:
         if self.backend is None:
             try:
                 self._run(rest, ctx, future)
-            except Exception as e:
+            except Exception as e:  # noqa: BLE001 — routed + re-raised
                 if future is not None:
                     future._finish(e)
                 raise
@@ -106,7 +106,7 @@ class Engine:
             def run_rest():
                 try:
                     self._run(rest, ctx, future)
-                except Exception as e:
+                except Exception as e:  # noqa: BLE001 — routed + re-raised
                     if future is not None:
                         future._finish(e)
                     raise  # the backend records it too (backend.errors())

@@ -26,7 +26,7 @@ from __future__ import annotations
 import io
 import json
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import numpy as np

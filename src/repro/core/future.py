@@ -22,6 +22,8 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
+from repro.core import concurrency
+
 
 class CheckpointError(RuntimeError):
     """A checkpoint pipeline stage failed."""
@@ -35,7 +37,9 @@ class CheckpointFuture:
         self._finished = threading.Event()
         self._exc: Optional[BaseException] = None
         self._superseded = False
-        self._lock = threading.Lock()
+        self._lock = concurrency.TrackedLock(
+            f"future:{ctx.name}:v{ctx.version}._lock",
+            concurrency.RANK_FUTURE)
         self._levels: dict[str, threading.Event] = {}
         self._callbacks: list = []
         self._resolved = False  # _finish ran (callbacks drained)

@@ -21,7 +21,7 @@ Three estimators of the optimal defensive-checkpoint interval:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

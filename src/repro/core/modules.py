@@ -16,17 +16,17 @@ Modules that complete a resilience level carry a ``level`` tag ("L1"/"L2"/
 """
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import numpy as np
 
+from repro.core import concurrency
 from repro.core import delta as dlt
 from repro.core import erasure, format as fmt
 from repro.core.pipeline import register_module
-from repro.core.storage import StorageTier, pick_tier
+from repro.core.storage import pick_tier
 from repro.kernels import ops as kops
 
 
@@ -113,16 +113,25 @@ class DeltaModule(Module):
         self.max_chain = max_chain
         self.max_dirty_ratio = max_dirty_ratio
         self._trackers: dict[tuple, dlt.DeltaTracker] = {}
-        self._locks: dict[tuple, threading.Lock] = {}
-        self._guard = threading.Lock()
+        #: per-(stream, rank) serialization locks — rank MODULE: held
+        #: across cluster queries (has_shard_record takes the cluster
+        #: lock), so they sit OUTSIDE it in the canonical order
+        self._locks: dict[tuple, concurrency.TrackedLock] = {}
+        self._guard = concurrency.TrackedLock(
+            "delta._guard", concurrency.RANK_MODULE_GUARD)
 
     def tracker(self, name: str, rank: int) -> dlt.DeltaTracker:
         with self._guard:
             return self._trackers.setdefault((name, rank), dlt.DeltaTracker())
 
-    def _lock(self, key: tuple) -> threading.Lock:
+    def _lock(self, key: tuple) -> concurrency.TrackedLock:
         with self._guard:
-            return self._locks.setdefault(key, threading.Lock())
+            lk = self._locks.get(key)
+            if lk is None:
+                lk = self._locks[key] = concurrency.TrackedLock(
+                    f"delta._locks[{key[0]}:r{key[1]}]",
+                    concurrency.RANK_MODULE)
+            return lk
 
     def reset_chain(self, name: str, rank: int, version: int):
         """Compaction hook: version's chain was folded into a full shard."""

@@ -24,9 +24,11 @@ from __future__ import annotations
 
 import os
 import re
-import threading
 from dataclasses import dataclass, field
 from typing import Callable, Optional
+
+from repro.core import concurrency
+from repro.core.concurrency import TrackedLock
 
 _UNESCAPE_RE = re.compile(r"_[us]")
 
@@ -77,9 +79,12 @@ class StorageTier:
 
     def __init__(self, info: TierInfo):
         self.info = info
-        self._lock = threading.Lock()
+        self._lock = TrackedLock(f"tier:{info.name}._lock",
+                                 concurrency.RANK_TIER)
         self._inflight = 0  # concurrent writers (producer-consumer pressure)
         self.put_calls = 0  # lifetime put count (small-write accounting)
+        self.get_calls = 0  # lifetime get count (read-amplification audit)
+        self.delete_calls = 0  # lifetime delete count (GC amplification)
         self.keys_calls = 0  # lifetime keys() listings (restart-planning
         #                      accounting: catalog-first restart needs zero)
 
@@ -88,6 +93,7 @@ class StorageTier:
         return self._inflight
 
     def _enter(self):
+        concurrency.note_tier_io(self, "put")
         with self._lock:
             self._inflight += 1
             self.put_calls += 1
@@ -101,12 +107,28 @@ class StorageTier:
         raise NotImplementedError
 
     def get(self, key: str) -> Optional[bytes]:
+        """Fetch one key (None when absent).  Counted in ``get_calls`` and
+        checked by the IO-under-lock detector; subclasses implement
+        ``_get``."""
+        self.get_calls += 1
+        concurrency.note_tier_io(self, "get")
+        return self._get(key)
+
+    def _get(self, key: str) -> Optional[bytes]:
         raise NotImplementedError
 
     def exists(self, key: str) -> bool:
         raise NotImplementedError
 
     def delete(self, key: str) -> None:
+        """Remove one key (idempotent).  Counted in ``delete_calls`` and
+        checked by the IO-under-lock detector; subclasses implement
+        ``_delete``."""
+        self.delete_calls += 1
+        concurrency.note_tier_io(self, "delete")
+        self._delete(key)
+
+    def _delete(self, key: str) -> None:
         raise NotImplementedError
 
     def keys(self, prefix: str = "") -> list[str]:
@@ -114,6 +136,7 @@ class StorageTier:
         restart planner's O(versions) -> O(1) listing claim is auditable;
         subclasses implement ``_keys``."""
         self.keys_calls += 1
+        concurrency.note_tier_io(self, "keys")
         return self._keys(prefix)
 
     def _keys(self, prefix: str = "") -> list[str]:
@@ -138,13 +161,13 @@ class DRAMTier(StorageTier):
         finally:
             self._exit()
 
-    def get(self, key):
+    def _get(self, key):
         return self._store.get(key)
 
     def exists(self, key):
         return key in self._store
 
-    def delete(self, key):
+    def _delete(self, key):
         self._store.pop(key, None)
 
     def _keys(self, prefix=""):
@@ -177,7 +200,7 @@ class FileTier(StorageTier):
         finally:
             self._exit()
 
-    def get(self, key):
+    def _get(self, key):
         try:
             with open(self._path(key), "rb") as f:
                 return f.read()
@@ -187,7 +210,7 @@ class FileTier(StorageTier):
     def exists(self, key):
         return os.path.exists(self._path(key))
 
-    def delete(self, key):
+    def _delete(self, key):
         try:
             os.remove(self._path(key))
         except FileNotFoundError:
@@ -238,7 +261,8 @@ class KVTier(StorageTier):
         self._compact_every = compact_every
         self._log_records = 0  # appended since the last snapshot
         self._log_f = None
-        self._journal_lock = threading.Lock()  # append/compact serialization
+        self._journal_lock = TrackedLock(  # append/compact serialization
+            f"tier:{name}._journal_lock", concurrency.RANK_JOURNAL)
         self.journal_skipped: list[str] = []  # corrupted entries on reload
         if journal and os.path.isdir(journal):
             self._load_journal()
@@ -373,13 +397,13 @@ class KVTier(StorageTier):
         finally:
             self._exit()
 
-    def get(self, key):
+    def _get(self, key):
         return self._store.get(key)
 
     def exists(self, key):
         return key in self._store
 
-    def delete(self, key):
+    def _delete(self, key):
         existed = self._store.pop(key, None) is not None
         if self._journal and existed:
             self._append_record(key, None)  # tombstone

@@ -10,10 +10,7 @@ Also provides the pairwise kernel used by the ring reduce-scatter encode
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK_N = 262_144  # words per tile (1 MiB rows); K<=16 keeps the tile <= 16 MiB VMEM

@@ -188,7 +188,7 @@ def main():
                               f"bytes/dev={rec['memory']['argument_size_in_bytes']/1e9:.2f}GB")
                     with open(out_path, "w") as f:
                         json.dump(rec, f, indent=1)
-                except Exception:
+                except Exception:  # noqa: BLE001 — recorded + printed
                     n_fail += 1
                     print(f"[FAIL] {tag}")
                     traceback.print_exc()

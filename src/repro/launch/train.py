@@ -13,14 +13,10 @@ Features exercised for real (CPU host):
   - DataStates lineage recording per checkpoint.
 """
 import argparse
-import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro import runtime
 from repro.configs.base import ShapeCfg, get_config, smoke_config
 from repro.core import (Cluster, DataStates, ModuleSpec, PipelineSpec,
                         TierTopology, VelocClient)

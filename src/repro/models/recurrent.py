@@ -11,7 +11,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.layers import cdt, he, pdt, rms_norm
 

@@ -8,14 +8,11 @@ analogue of DeepFreeze's execution-graph augmentation (the paper's L1).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.model import make_loss_fn, model_specs
-from repro.sharding import pspec_tree
 from repro.train import optimizer as opt_lib
 
 

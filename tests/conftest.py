@@ -7,3 +7,30 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+from repro.core import concurrency  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def lock_discipline():
+    """Suite-wide concurrency-contract enforcement: every test runs with
+    the runtime checker in raise mode, so tier I/O under the cluster lock
+    or a lock-order inversion fails loudly wherever it happens.
+
+    Violations raised on background threads (or swallowed by defensive
+    except blocks, e.g. Cluster._tier_get treating a failed get as a
+    miss) still land in ``concurrency.violations()`` — asserted empty at
+    teardown.  Tests that *intend* to trigger violations (the historical
+    bug reconstructions) call ``concurrency.clear_violations()`` before
+    returning."""
+    concurrency.reset()
+    concurrency.enable("raise")
+    yield
+    leftovers = concurrency.violations()
+    concurrency.disable()
+    concurrency.reset()
+    assert not leftovers, (
+        "concurrency-contract violations during test:\n  "
+        + "\n  ".join(leftovers))

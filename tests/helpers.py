@@ -23,18 +23,19 @@ class WrappedTier(StorageTier):
     def put(self, key, data):
         return self.inner.put(key, data)
 
-    def get(self, key):
+    def _get(self, key):
+        # route through inner.get() so the wrapped tier's get_calls
+        # accounting (and the IO-under-lock hook) still observe reads
+        # made through the wrapper; same for _delete/_keys below
         return self.inner.get(key)
 
     def exists(self, key):
         return self.inner.exists(key)
 
-    def delete(self, key):
+    def _delete(self, key):
         return self.inner.delete(key)
 
     def _keys(self, prefix=""):
-        # route through inner.keys() so the wrapped tier's keys_calls
-        # accounting still observes listings made through the wrapper
         return self.inner.keys(prefix)
 
 

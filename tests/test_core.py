@@ -2,9 +2,6 @@
 import threading
 import time
 
-import numpy as np
-import pytest
-
 from repro.core.backend import ActiveBackend, RateLimiter
 from repro.core.engine import Engine
 from repro.core.modules import CheckpointContext, IntervalModule, Module

@@ -1,10 +1,9 @@
 """Sharding resolution rules, DataStates lineage, HLO analyzer units."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.analysis.hlo import HloModule, analyze_text, roofline
+from repro.analysis.hlo import analyze_text, roofline
 from repro.core import Cluster, DataStates, VelocConfig
 from repro.sharding import resolve_spec
 

@@ -8,8 +8,7 @@ import pytest
 from repro.configs.base import SHAPES, ShapeCfg, get_config, list_configs, smoke_config
 from repro.models.model import (batch_specs, batch_struct, cache_init,
                                 cache_specs, count_params, init_model,
-                                make_batch, make_decode_fn, make_loss_fn,
-                                make_prefill_fn, model_specs)
+                                make_batch, make_decode_fn, make_prefill_fn)
 from repro.train.steps import init_train_state, make_train_step, train_state_specs
 
 ARCHS = list_configs()

@@ -584,8 +584,6 @@ def test_history_rows_resolve_when_future_completes(tmp_path):
 
 
 def test_history_row_marks_superseded(tmp_path):
-    from repro.core.backend import ActiveBackend as _AB
-
     cfg = VelocConfig(scratch=str(tmp_path), mode="async", partner=False,
                       xor_group=0, flush=True, keep_versions=10,
                       backend_workers=1)

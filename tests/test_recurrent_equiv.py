@@ -6,9 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ShapeCfg, smoke_config
+from repro.configs.base import smoke_config
 from repro.models import recurrent as R
-from repro.models.model import cache_init, init_model, make_decode_fn, make_prefill_fn
+from repro.models.model import cache_init, init_model, make_decode_fn
 from repro.models.transformer import lm_forward
 
 

@@ -1,11 +1,8 @@
 """End-to-end behaviour: resilient training with VELOC — restart exactness,
 failure recovery mid-run, async-vs-sync equivalence, productive branching."""
-import shutil
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import ShapeCfg, smoke_config
 from repro.core import DataStates, VelocClient, VelocConfig

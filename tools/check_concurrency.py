@@ -1,0 +1,240 @@
+#!/usr/bin/env python
+"""AST lint for the repo's concurrency contracts (static prong of the
+checker; the runtime prong is repro.core.concurrency).
+
+Rules:
+
+  tier-io-under-lock   a ``.put/.get/.delete/.keys`` call on a tier-ish
+                       receiver (identifier matching ``tier``/``tiers``)
+                       lexically inside a ``with self._lock:`` block —
+                       the PR-3 bug class, caught at review time instead
+                       of runtime.
+  raw-lock             ``threading.Lock()/RLock()/Condition()`` built
+                       outside repro.core.concurrency — every lock must
+                       be a Tracked* primitive with a declared rank.
+  sleep-under-lock     ``time.sleep`` lexically inside any with-block
+                       whose context manager looks like a lock
+                       (``*_lock``, ``*_cv``, ``*_guard``, ``*lock``) —
+                       sleeping while holding a lock stalls every waiter.
+  swallowed-except     bare ``except:`` anywhere, or an ``except
+                       Exception/BaseException:`` whose body is only
+                       ``pass`` — maintenance-lane tasks that swallow
+                       errors hide seal/GC failures forever.
+
+Suppression: a ``# noqa`` comment on the offending line (optionally with
+codes, e.g. ``# noqa: BLE001``) or ``# lint: allow`` skips that line.
+
+Usage:
+    python tools/check_concurrency.py src/
+    python tools/check_concurrency.py src/repro/core/api.py --quiet
+
+Exit status 1 when any violation is found.  Also runs under pytest via
+tests/test_concurrency.py.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from dataclasses import dataclass
+
+TIER_IO_METHODS = {"put", "get", "delete", "keys"}
+TIER_NAME_RE = re.compile(r"(^|_)tiers?$", re.IGNORECASE)
+LOCKISH_RE = re.compile(r"(_lock|_cv|_guard|lock)$")
+RAW_LOCK_CTORS = {"Lock", "RLock", "Condition"}
+#: files allowed to build raw threading primitives (the tracker itself)
+RAW_LOCK_EXEMPT = ("concurrency.py",)
+
+
+@dataclass
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _name_of(node: ast.expr) -> str:
+    """Terminal identifier of a Name/Attribute chain ('' otherwise)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _is_self_lock(expr: ast.expr) -> bool:
+    """``self._lock`` (the cluster-lock spelling the runtime contract
+    names: no tier I/O under it)."""
+    return (isinstance(expr, ast.Attribute) and expr.attr == "_lock"
+            and isinstance(expr.value, ast.Name) and expr.value.id == "self")
+
+
+def _is_lockish(expr: ast.expr) -> bool:
+    name = _name_of(expr)
+    # a with on a lock-returning helper (``with self._cat_lock(n):``)
+    if isinstance(expr, ast.Call):
+        name = _name_of(expr.func)
+    return bool(name) and bool(LOCKISH_RE.search(name))
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.violations: list[Violation] = []
+        self._cluster_lock_depth = 0  # inside `with self._lock:`
+        self._any_lock_depth = 0      # inside any lock-ish with
+
+    # -- helpers ----------------------------------------------------------
+    def _suppressed(self, line: int) -> bool:
+        if 1 <= line <= len(self.lines):
+            text = self.lines[line - 1]
+            return "# noqa" in text or "# lint: allow" in text
+        return False
+
+    def _flag(self, node: ast.AST, rule: str, message: str):
+        if not self._suppressed(node.lineno):
+            self.violations.append(
+                Violation(self.path, node.lineno, rule, message))
+
+    # -- with-block nesting -----------------------------------------------
+    def visit_With(self, node: ast.With):
+        cluster = any(_is_self_lock(item.context_expr) for item in node.items)
+        lockish = cluster or any(_is_lockish(item.context_expr)
+                                 for item in node.items)
+        self._cluster_lock_depth += cluster
+        self._any_lock_depth += lockish
+        self.generic_visit(node)
+        self._cluster_lock_depth -= cluster
+        self._any_lock_depth -= lockish
+
+    # a nested def/lambda runs later, NOT under the enclosing with —
+    # don't inherit the lock context into it
+    def _visit_scope(self, node):
+        saved = self._cluster_lock_depth, self._any_lock_depth
+        self._cluster_lock_depth = self._any_lock_depth = 0
+        self.generic_visit(node)
+        self._cluster_lock_depth, self._any_lock_depth = saved
+
+    def visit_FunctionDef(self, node):
+        self._visit_scope(node)
+
+    def visit_AsyncFunctionDef(self, node):
+        self._visit_scope(node)
+
+    def visit_Lambda(self, node):
+        self._visit_scope(node)
+
+    # -- rules ------------------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            # tier-io-under-lock
+            if (self._cluster_lock_depth > 0
+                    and func.attr in TIER_IO_METHODS
+                    and TIER_NAME_RE.search(_name_of(func.value) or "")):
+                self._flag(node, "tier-io-under-lock",
+                           f"{_name_of(func.value)}.{func.attr}() inside a "
+                           f"`with self._lock:` block — tier I/O must run "
+                           f"with the cluster lock released")
+            # raw-lock
+            if (func.attr in RAW_LOCK_CTORS
+                    and _name_of(func.value) == "threading"
+                    and not self.path.endswith(RAW_LOCK_EXEMPT)):
+                self._flag(node, "raw-lock",
+                           f"threading.{func.attr}() built directly — use "
+                           f"repro.core.concurrency.Tracked{func.attr} with "
+                           f"a declared rank")
+            # sleep-under-lock
+            if (self._any_lock_depth > 0 and func.attr == "sleep"
+                    and _name_of(func.value) == "time"):
+                self._flag(node, "sleep-under-lock",
+                           "time.sleep() while lexically holding a lock "
+                           "stalls every waiter")
+        elif isinstance(func, ast.Name):
+            if (func.id in RAW_LOCK_CTORS
+                    and not self.path.endswith(RAW_LOCK_EXEMPT)):
+                self._flag(node, "raw-lock",
+                           f"{func.id}() built directly — use "
+                           f"repro.core.concurrency.Tracked{func.id} with a "
+                           f"declared rank")
+            if self._any_lock_depth > 0 and func.id == "sleep":
+                self._flag(node, "sleep-under-lock",
+                           "sleep() while lexically holding a lock stalls "
+                           "every waiter")
+        self.generic_visit(node)
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        if node.type is None:
+            self._flag(node, "swallowed-except",
+                       "bare `except:` swallows every error (including "
+                       "KeyboardInterrupt) — name the exception")
+        elif (_name_of(node.type) in ("Exception", "BaseException")
+              and len(node.body) == 1
+              and isinstance(node.body[0], ast.Pass)):
+            self._flag(node, "swallowed-except",
+                       f"`except {_name_of(node.type)}: pass` silently "
+                       f"swallows errors — record or re-raise")
+        self.generic_visit(node)
+
+
+def check_source(path: str, source: str) -> list[Violation]:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Violation(path, e.lineno or 0, "syntax-error", str(e))]
+    checker = _Checker(path, source)
+    checker.visit(tree)
+    return checker.violations
+
+
+def check_file(path: str) -> list[Violation]:
+    with open(path, encoding="utf-8") as f:
+        return check_source(path, f.read())
+
+
+def iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, _dirs, files in os.walk(p):
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def check_paths(paths) -> list[Violation]:
+    out = []
+    for path in iter_py_files(paths):
+        out.extend(check_file(path))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="concurrency-contract AST lint (see module docstring)")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the all-clear summary line")
+    args = ap.parse_args(argv)
+    violations = check_paths(args.paths)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"{len(violations)} concurrency-contract violation(s)",
+              file=sys.stderr)
+        return 1
+    if not args.quiet:
+        print("concurrency contracts clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
