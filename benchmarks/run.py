@@ -30,6 +30,13 @@ scale with the scaling factor stated in the ``derived`` column.
                   listings per restart and planning wall time, durable
                   stream catalog on vs off (scan discovery is O(versions)
                   listings per restart; the catalog needs none).
+  bench_restore_serving  concurrent restore serving: N readers pulling
+                  the same sealed delta chain through the one-shot restore
+                  planner, bounded reader pool and single-flight shared
+                  segment/pack cache — aggregate throughput vs the serial
+                  single-consumer baseline, per-request p50/p95/p99 tail
+                  latency, and the exactly-once external blob-get
+                  guarantee (counter-asserted).
   bench_scale     modeled weak-scaling of the L3 flush under shared-PFS
                   bandwidth (flush contention), from the storage model.
   bench_lock_overhead  runtime concurrency checker cost: tracked-lock
@@ -447,7 +454,7 @@ def bench_restart():
         tiers = cluster.external_tiers + \
             [t for ts in cluster._node_tiers for t in ts]
         for t in tiers:
-            t.keys_calls = 0
+            t.reset_io_counters()
         t0 = time.perf_counter()
         plan = rst.plan_restart(cluster, cfg.name)
         t_plan = time.perf_counter() - t0
@@ -465,6 +472,163 @@ def bench_restart():
     row(f"restart_{m1}_{nv}v_plan", p1 * 1e6,
         f"{k1}keys_calls,restore={r1 * 1e3:.0f}ms,"
         f"keys_eliminated={k0 - k1},plan_speedup={p0 / max(p1, 1e-9):.2f}x")
+
+
+def bench_restore_serving():
+    """Concurrent restore serving: many readers pull the SAME sealed
+    delta stream (analysis jobs, replicas, debuggers attaching to one
+    checkpoint).  The serial baseline is the pre-serving world — every
+    request is an independent single-consumer restore paying its own
+    chain fetch + parse against a cold fabric.  The serving path runs N
+    readers against ONE shared ``Cluster``: the one-shot restore planner
+    resolves the chain once, the bounded reader pool overlaps hop
+    fetches, and the single-flight segment/pack cache makes each
+    external blob cost exactly one get no matter how many readers race
+    (counter-asserted below).  Reports aggregate throughput vs serial
+    and per-request p50/p95/p99 tail latency.
+
+    The local FileTier answers gets in microseconds; the PFS/object
+    store that the external level MODELS answers in milliseconds.  Each
+    external get therefore carries an injected ``RTT`` sleep, so the
+    benchmark times the fetch path the serving fabric optimizes instead
+    of local-disk noise."""
+    import threading
+
+    from repro.core import Cluster, VelocClient, VelocConfig
+    from repro.core import format as fmt
+    from repro.core import restart as rst
+
+    nv = 9
+    n = (256 << 10) // 4  # 256 KiB of f32 state
+    reqs = 32
+    RTT = 0.010  # modeled external-tier get round trip (object store)
+    rng = np.random.default_rng(0)
+    w0 = rng.standard_normal(n).astype(np.float32)
+    dirty = max(1, n // 64)
+
+    root = "/tmp/veloc_bench_serving"
+    shutil.rmtree(root, ignore_errors=True)
+    cfg = VelocConfig(scratch=root, mode="sync", delta=True,
+                      delta_chunk_bytes=64 * 1024, delta_max_chain=16,
+                      partner=False, xor_group=0, flush=True,
+                      keep_versions=100, aggregate=True, pack_versions=4,
+                      catalog=True)
+    client = VelocClient(cfg)
+    w = w0
+    for v in range(1, nv + 1):
+        w = w.copy()
+        lo = (v * 9973) % (n - dirty)
+        w[lo:lo + dirty] += 1.0
+        client.checkpoint({"w": w}, version=v, device_snapshot=False)
+    client.shutdown()
+    expect = w
+
+    class ExternalModel:
+        """Per-key get accounting (for the exactly-once check) plus the
+        modeled per-get RTT of the remote store behind this tier."""
+
+        def __init__(self, inner):
+            self.inner = inner
+            self.counts: dict[str, int] = {}
+            self._mu = threading.Lock()
+
+        def __getattr__(self, attr):
+            return getattr(self.inner, attr)
+
+        def get(self, key):
+            with self._mu:
+                self.counts[key] = self.counts.get(key, 0) + 1
+            time.sleep(RTT)
+            return self.inner.get(key)
+
+    def fresh_cluster(readers=None):
+        kw = {} if readers is None else {"restore_readers": readers}
+        cluster = Cluster(cfg, nranks=1, **kw)
+        for tiers in cluster._node_tiers:
+            for t in tiers:
+                t.wipe()  # fresh node: externals must serve the restore
+        for t in cluster.external_tiers:
+            t.reset_io_counters()
+        cluster.external_tiers = [ExternalModel(t)
+                                  for t in cluster.external_tiers]
+        return cluster
+
+    def check(regions):
+        got = regions["w"].view(np.float32)
+        assert np.array_equal(got, expect), "restored bytes diverge"
+
+    def serve_one(cluster, plan=None):
+        t0 = time.perf_counter()
+        regions = rst.load_rank_regions(cluster, cfg.name, nv, 0,
+                                        plan=plan)
+        dt = time.perf_counter() - t0
+        return regions, dt
+
+    def pcts(lats):
+        p50, p95, p99 = np.percentile(np.asarray(lats) * 1e3, (50, 95, 99))
+        return f"p50={p50:.1f}ms,p95={p95:.1f}ms,p99={p99:.1f}ms"
+
+    # --- serial baseline: one cold single-reader restore per request ---
+    lats = []
+    t0 = time.perf_counter()
+    for _ in range(reqs):
+        regions, dt = serve_one(fresh_cluster(readers=1))
+        lats.append(dt)
+    serial_wall = time.perf_counter() - t0
+    check(regions)
+    base_tput = reqs / serial_wall
+    row(f"serving_serial_{reqs}req", np.mean(lats) * 1e6,
+        f"{pcts(lats)},wall={serial_wall * 1e3:.0f}ms,"
+        f"throughput={base_tput:.1f}req_s")
+
+    # --- serving sweep: N concurrent readers, one shared cluster,
+    # --- one shared restore plan (built inside the timed region)
+    for nr in (2, 4, 8):
+        cluster = fresh_cluster()
+        counting = cluster.external_tiers
+        lats = [0.0] * reqs
+        sample = [None] * nr
+        errs = []
+        barrier = threading.Barrier(nr)
+
+        def reader(i, plan):
+            try:
+                barrier.wait()
+                for j in range(i, reqs, nr):
+                    sample[i], lats[j] = serve_one(cluster, plan)
+            except Exception as e:
+                errs.append(e)
+
+        t0 = time.perf_counter()
+        plan = rst.plan_restore(cluster, cfg.name)
+        threads = [threading.Thread(target=reader, args=(i, plan))
+                   for i in range(nr)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        assert not errs, errs
+        for regions in sample:
+            check(regions)
+        # exactly-once: every segment/pack blob paid ONE external get
+        # across all readers and requests (single-flight shared cache)
+        blob_gets = {k: c for t in counting for k, c in t.counts.items()
+                     if k.startswith(fmt.pack_prefix(cfg.name))
+                     or k.endswith("/segment")}
+        dup = {k: c for k, c in blob_gets.items() if c != 1}
+        assert blob_gets and not dup, (dup or "no blob gets observed")
+        tput = reqs / wall
+        extra = ""
+        if nr == 8:
+            keys = sum(t.inner.keys_calls for t in counting)
+            assert keys == 0, f"{keys} external listings (catalog miss)"
+            extra = f",blob_gets=once({len(blob_gets)}),keys_calls=0"
+            assert tput / base_tput >= 2.0, (
+                f"serving throughput {tput / base_tput:.2f}x < 2x baseline")
+        row(f"serving_concurrent_{nr}r_{reqs}req", np.mean(lats) * 1e6,
+            f"{pcts(lats)},wall={wall * 1e3:.0f}ms,"
+            f"throughput={tput / base_tput:.2f}x{extra}")
 
 
 def bench_scale():
@@ -583,7 +747,8 @@ def bench_lock_overhead():
 
 ALL_BENCHES = (bench_levels, bench_engine, bench_erasure, bench_capture,
                bench_async, bench_delta, bench_aggregation, bench_packing,
-               bench_restart, bench_interval, bench_scale,
+               bench_restart, bench_restore_serving, bench_interval,
+               bench_scale,
                bench_lock_overhead)
 
 

@@ -92,6 +92,11 @@ class VelocConfig:
     phase_predictor: str = "none"       # none | ema | gru
     use_kv_external: bool = False       # add the DAOS-style KV tier
     keep_versions: int = 3              # GC horizon
+    restore_readers: int = 4            # bounded fetch pool width for the
+    #                                     concurrent restore serving path
+    #                                     (<=1 = serial chain walk)
+    restore_cache_blobs: int = 16       # shared segment/pack blob cache
+    #                                     bound (whole blobs pinned in RAM)
 
     # -- compilation to the v2 specs ------------------------------------
     def to_pipeline_spec(self) -> PipelineSpec:
@@ -175,7 +180,9 @@ class Cluster:
     def __init__(self, topology: Union[TierTopology, VelocConfig],
                  nranks: int = 1, *, group_size: Optional[int] = None,
                  rate_limit_bps: Optional[float] = None,
-                 aggregate: Optional[bool] = None):
+                 aggregate: Optional[bool] = None,
+                 restore_readers: Optional[int] = None,
+                 restore_cache_blobs: Optional[int] = None):
         if isinstance(topology, VelocConfig):
             self.cfg: Optional[VelocConfig] = topology
             if group_size is None:
@@ -184,6 +191,11 @@ class Cluster:
                 rate_limit_bps = topology.rate_limit_bps
             if aggregate is None:
                 aggregate = topology.aggregate
+            if restore_readers is None:
+                restore_readers = getattr(topology, "restore_readers", None)
+            if restore_cache_blobs is None:
+                restore_cache_blobs = getattr(
+                    topology, "restore_cache_blobs", None)
             topology = topology.to_tier_topology()
         else:
             self.cfg = None
@@ -238,9 +250,21 @@ class Cluster:
         self._plocks: dict[str, concurrency.TrackedLock] = {}  # per-pack
         self._plock_guard = concurrency.TrackedLock(
             "cluster._plock_guard", concurrency.RANK_GUARD)
-        self._seg_lock = concurrency.TrackedLock(
-            "cluster._seg_lock", concurrency.RANK_GUARD)
+        #: shared cross-reader blob cache condition (rank READCACHE):
+        #: single-flight — concurrent readers of one (tier, key) elect a
+        #: winner to fetch+parse (with NO lock held) while losers wait
+        #: here, so N readers cost the external tier exactly one get
+        self._seg_lock = concurrency.TrackedCondition(
+            "cluster._seg_lock", concurrency.RANK_READCACHE)
         self._segcache: dict[tuple, fmt.SegmentReader] = {}
+        self._seg_loading: set = set()  # (tier, key) fetches in flight
+        self._segcache_max = int(restore_cache_blobs
+                                 if restore_cache_blobs is not None
+                                 else self._SEGCACHE_MAX)
+        #: restore serving: bounded fetch pool width (<=1 = serial walk)
+        self.restore_readers = int(restore_readers
+                                   if restore_readers is not None else 4)
+        self._reader_pool = None
         #: torn / corrupt segments observed while reading (restart surfaces
         #: these per candidate instead of silently decoding garbage)
         self.segment_diagnostics: list[dict] = []
@@ -311,10 +335,55 @@ class Cluster:
     def _cache_segment(self, tier_name: str, skey: str,
                        reader: fmt.SegmentReader):
         with self._seg_lock:
-            self._segcache.pop((tier_name, skey), None)
-            self._segcache[(tier_name, skey)] = reader
-            while len(self._segcache) > self._SEGCACHE_MAX:
-                self._segcache.pop(next(iter(self._segcache)))
+            self._cache_segment_locked(tier_name, skey, reader)
+
+    def _cache_segment_locked(self, tier_name: str, skey: str,
+                              reader: fmt.SegmentReader):
+        self._segcache.pop((tier_name, skey), None)
+        self._segcache[(tier_name, skey)] = reader
+        while len(self._segcache) > self._segcache_max:
+            self._segcache.pop(next(iter(self._segcache)))
+
+    def _cached_blob_reader(self, tier: StorageTier, skey: str, parse):
+        """Single-flight fetch+parse of one segment/pack blob through the
+        shared cross-reader cache.  Among N concurrent readers of the same
+        (tier, key) exactly one performs the external ``get`` (and the
+        parse) — with NO lock held — while the rest wait on ``_seg_lock``
+        and reuse the cached reader.  A failed fetch or torn parse caches
+        NOTHING: the next waiter retries itself, so one reader racing a
+        flaky tier never poisons the cache for the others.  Returns
+        ``(reader_or_None, fresh)`` — ``fresh`` is True when this call did
+        the fetch (callers memoize side effects once, not per cache hit)."""
+        ck = (tier.info.name, skey)
+        with self._seg_lock:
+            while True:
+                reader = self._segcache.get(ck)
+                if reader is not None:
+                    # LRU touch
+                    self._segcache.pop(ck)
+                    self._segcache[ck] = reader
+                    return reader, False
+                if ck not in self._seg_loading:
+                    self._seg_loading.add(ck)
+                    break
+                self._seg_lock.wait(1.0)
+        reader, err = None, None
+        try:
+            blob = self._tier_get(tier, skey)
+            if blob is not None:
+                try:
+                    reader = parse(blob)
+                except Exception as e:  # noqa: BLE001 — torn blob
+                    err = e
+        finally:
+            with self._seg_lock:
+                if reader is not None:
+                    self._cache_segment_locked(tier.info.name, skey, reader)
+                self._seg_loading.discard(ck)
+                self._seg_lock.notify_all()
+        if err is not None:
+            self._diagnose_segment(tier.info.name, skey, err)
+        return reader, True
 
     def _segment_reader(self, tier: StorageTier, name: str, version: int
                         ) -> Optional[fmt.SegmentReader]:
@@ -324,21 +393,22 @@ class Cluster:
         flag steers the WRITE path only, a segment that exists on disk must
         stay readable even when the process restarts with aggregation off."""
         skey = fmt.segment_key(name, version)
-        ck = (tier.info.name, skey)
-        with self._seg_lock:
-            reader = self._segcache.get(ck)
-        if reader is not None:
-            return reader
-        blob = self._tier_get(tier, skey)
-        if blob is None:
-            return None
-        try:
-            reader = fmt.SegmentReader(blob)
-        except Exception as e:  # noqa: BLE001 — torn segment
-            self._diagnose_segment(tier.info.name, skey, e)
-            return None
-        self._cache_segment(tier.info.name, skey, reader)
+        reader, _ = self._cached_blob_reader(tier, skey, fmt.SegmentReader)
         return reader
+
+    def reader_pool(self):
+        """The shared bounded restore fetch pool (None when
+        ``restore_readers <= 1`` — chain walks stay serial).  Created
+        lazily so write-only processes never spawn reader threads; shared
+        across every concurrent reader of this cluster so total restore
+        fan-out stays bounded no matter how many readers arrive."""
+        if self.restore_readers <= 1:
+            return None
+        with self._seg_lock:
+            if self._reader_pool is None:
+                from repro.core.backend import ReaderPool
+                self._reader_pool = ReaderPool(self.restore_readers)
+            return self._reader_pool
 
     def _segment_entry(self, tier: StorageTier, name: str, version: int,
                        key: str) -> Optional[bytes]:
@@ -359,23 +429,13 @@ class Cluster:
         """Cached index over one rolling pack, memoizing which versions it
         carries (so a fresh process resolves pack membership once per
         blob).  Torn packs parse to None with a diagnostic."""
-        ck = (tier.info.name, skey)
-        with self._seg_lock:
-            reader = self._segcache.get(ck)
-        if isinstance(reader, fmt.PackReader):
-            return reader
-        blob = self._tier_get(tier, skey)
-        if blob is None:
+        reader, fresh = self._cached_blob_reader(tier, skey, fmt.PackReader)
+        if reader is None or not isinstance(reader, fmt.PackReader):
             return None
-        try:
-            reader = fmt.PackReader(blob)
-        except Exception as e:  # noqa: BLE001 — torn pack
-            self._diagnose_segment(tier.info.name, skey, e)
-            return None
-        self._cache_segment(tier.info.name, skey, reader)
-        with self._lock:
-            for v in reader.versions:
-                self._packed.setdefault((name, v), skey)
+        if fresh:
+            with self._lock:
+                for v in reader.versions:
+                    self._packed.setdefault((name, v), skey)
         return reader
 
     def _pack_skey_for(self, tier: StorageTier, name: str, version: int
@@ -1212,6 +1272,15 @@ class Cluster:
                 seg_tiers |= self._rewrite_pack_io(name, skey, pubs)
         for tier in self.external_tiers:
             if tier.info.name in seg_tiers:
+                # the fresh bytes landed INSIDE this tier's segment/pack —
+                # but a DIRECT copy published before the seal (L1/L2
+                # manifests go out via note_shard while the batch is still
+                # open) would keep the stale parent/delta metadata and win
+                # last-writer key-scan discovery.  Refresh any that exist;
+                # never create new direct duplicates beside a sealed blob.
+                for key, blob in pubs.items():
+                    if tier.exists(key):
+                        tier.put(key, blob)
                 continue
             for key, blob in pubs.items():
                 tier.put(key, blob)
@@ -1228,12 +1297,25 @@ class Cluster:
             blob = self._tier_get(tier, key)
             if blob is not None:
                 return blob
+        with self._lock:
+            packed = self._packed.get((name, version))
         for tier in self.external_tiers:
-            blob = self._tier_get(tier, key)
-            if blob is None:
-                blob = self._segment_entry(tier, name, version, key)
-            if blob is None:
+            if packed is not None:
+                # pack membership (catalog-seeded or scanned) says the
+                # shard lives in a rolling pack: go straight to the cached
+                # pack instead of paying two guaranteed miss-probes per
+                # hop per reader; other layouts stay as fallbacks.
                 blob = self._pack_entry(tier, name, version, key)
+                if blob is None:
+                    blob = self._tier_get(tier, key)
+                if blob is None:
+                    blob = self._segment_entry(tier, name, version, key)
+            else:
+                blob = self._tier_get(tier, key)
+                if blob is None:
+                    blob = self._segment_entry(tier, name, version, key)
+                if blob is None:
+                    blob = self._pack_entry(tier, name, version, key)
             if blob is not None:
                 return blob
         return None
@@ -1985,12 +2067,13 @@ class VelocClient:
         from repro.core import restart
 
         self.restart_diagnostics = []
-        found = restart.find_restart(self.cluster, self.name)
+        plan = restart.plan_restore(self.cluster, self.name)
+        found = plan.candidates
         for cand in found:
             try:
                 regions = restart.load_rank_regions(
                     self.cluster, self.name, cand["version"], self.rank,
-                    distance=self._partner_distance)
+                    distance=self._partner_distance, plan=plan)
                 state = tree_from_regions(template, regions, shardings)
                 return cand["version"], state
             except Exception as e:  # noqa: BLE001 — fall back a level/version

@@ -62,6 +62,95 @@ class RateLimiter:
             self._sleep(min(need, 0.05))
 
 
+class ReaderPool:
+    """Bounded worker pool for the restore serving path: delta-chain hop
+    and per-rank shard fetches overlap instead of walking serially, while
+    the worker cap keeps N concurrent readers from turning one restore
+    into an unbounded thread storm against the external tier.
+
+    Deliberately separate from ``ActiveBackend``'s checkpoint lanes: reads
+    must not queue behind (or preempt) checkpoint flushes, and restore
+    often runs in a fresh process that never starts a backend.  Workers
+    spawn lazily on first use and are daemons — an idle pool costs
+    nothing.
+
+    ``run_all(fns)`` submits every thunk, blocks until all complete, and
+    returns ``[(value, error), ...]`` in submission order — per-item
+    exceptions are captured, not raised, so a failed *speculative* fetch
+    (a chain hop deeper than the rank's actual full base) never aborts
+    the whole restore; the caller re-raises only for hops it truly needs.
+    Calls from a pool worker run inline (no nested-submit deadlock)."""
+
+    def __init__(self, workers: int = 4, name: str = "reader_pool"):
+        self.workers = max(1, int(workers))
+        self._cv = concurrency.TrackedCondition(
+            f"{name}._cv", concurrency.RANK_READER)
+        self._queue: list = []  # FIFO of (job_state, index)
+        self._threads: list[threading.Thread] = []
+        self._stop = False
+        self._tls = threading.local()
+
+    def _ensure_workers_locked(self, pending: int):
+        want = min(self.workers, len(self._threads) + pending)
+        while len(self._threads) < want:
+            t = threading.Thread(target=self._worker, daemon=True,
+                                 name=f"veloc-reader-{len(self._threads)}")
+            self._threads.append(t)
+            t.start()
+
+    def _worker(self):
+        self._tls.in_pool = True
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait(1.0)
+                if self._stop:
+                    return
+                job, i = self._queue.pop(0)
+            fn = job["fns"][i]
+            value, err = None, None
+            try:
+                value = fn()
+            except BaseException as e:  # noqa: BLE001 — deferred to caller
+                err = e
+            with self._cv:
+                job["results"][i] = (value, err)
+                job["done"] += 1
+                if job["done"] == len(job["fns"]):
+                    self._cv.notify_all()
+
+    def run_all(self, fns) -> list[tuple]:
+        fns = list(fns)
+        if not fns:
+            return []
+        if getattr(self._tls, "in_pool", False) or self.workers <= 1 \
+                or len(fns) == 1:
+            out = []
+            for fn in fns:
+                try:
+                    out.append((fn(), None))
+                except BaseException as e:  # noqa: BLE001 — deferred
+                    out.append((None, e))
+            return out
+        job = {"fns": fns, "results": [None] * len(fns), "done": 0}
+        with self._cv:
+            for i in range(len(fns)):
+                self._queue.append((job, i))
+            self._ensure_workers_locked(len(fns))
+            self._cv.notify_all()
+            while job["done"] < len(fns):
+                self._cv.wait(1.0)
+        return job["results"]
+
+    def shutdown(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=5)
+        self._threads = []
+
+
 @dataclass(order=True)
 class _Task:
     priority: int

@@ -25,7 +25,11 @@ canonical lock order and recorded in a global lock-order graph:
   rank 30   cluster._vlocks[...]        per-version rewrite
   rank 32   cluster._plocks[...]        per-pack rewrite
   rank 40   backend._cv                 ActiveBackend queue condition
-  rank 50   leaf guards (_seg_lock, _plock_guard, _cat_guard, RateLimiter)
+  rank 44   reader_pool._cv             restore-side bounded fetch pool
+  rank 46   cluster._seg_lock           shared segment/pack blob cache
+            (single-flight condition: loser readers wait here while the
+            winner fetches WITHOUT the lock held)
+  rank 50   leaf guards (_plock_guard, _cat_guard, RateLimiter)
   rank 60   StorageTier._lock           per-tier accounting
   rank 62   KVTier._journal_lock        journal append/compact
   rank 70   CheckpointFuture._lock      callback/level bookkeeping
@@ -66,6 +70,8 @@ RANK_CLUSTER = 20
 RANK_VERSION = 30
 RANK_PACK = 32
 RANK_BACKEND = 40
+RANK_READER = 44
+RANK_READCACHE = 46
 RANK_GUARD = 50
 RANK_TIER = 60
 RANK_JOURNAL = 62

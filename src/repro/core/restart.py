@@ -37,6 +37,86 @@ def find_restart(cluster, name: str) -> list[dict]:
     return _best_level_candidates(cluster.manifests(name))
 
 
+class RestorePlan:
+    """Everything one restore needs, resolved ONCE up front: candidate
+    versions, per-version manifests (shard digests, parent links, erasure
+    group), delta chains, and rolling-pack locations — all from a single
+    ``cluster.manifests`` pass (catalog-first when the cluster carries a
+    durable stream catalog, costing zero key listings).
+
+    The serial restore's hidden cost was re-resolving manifests *twice
+    per chain hop* (once for the digest, once inside the parity
+    fallback); a plan is built once per restore request and shared across
+    every hop — and, for multi-rank or concurrent restores, across
+    readers."""
+
+    def __init__(self, name: str, mode: str, candidates: list[dict],
+                 manifests: dict[int, dict],
+                 parents: dict[int, Optional[int]],
+                 packs: dict[int, str], known: set):
+        self.name = name
+        self.mode = mode              # "catalog" | "scan"
+        self.candidates = candidates  # newest-first (version, best level)
+        self.manifests = manifests    # version -> best manifest
+        self.parents = parents        # version -> parent (None = full)
+        self.packs = packs            # version -> rolling-pack key
+        self.known = known            # versions with ANY metadata
+        self._chains: dict[int, Optional[list[int]]] = {}
+
+    def manifest(self, version: int) -> Optional[dict]:
+        return self.manifests.get(int(version))
+
+    def digest(self, version: int, rank: int) -> Optional[str]:
+        m = self.manifests.get(int(version))
+        return (m or {}).get("shard_digests", {}).get(rank)
+
+    def chain(self, version: int) -> Optional[list[int]]:
+        """``[version, parent, ..., full base]`` purely from metadata;
+        None when the parent links are cyclic, overlong or dangling (the
+        loader then falls back to the per-hop blob walk)."""
+        v0 = int(version)
+        if v0 in self._chains:
+            return self._chains[v0]
+        chain: list[int] = []
+        v: Optional[int] = v0
+        ok = True
+        while v is not None:
+            if v in chain or len(chain) >= MAX_CHAIN_DEPTH \
+                    or v not in self.known:
+                ok = False
+                break
+            chain.append(int(v))
+            v = self.parents.get(v)
+        out = chain if ok else None
+        self._chains[v0] = out
+        return out
+
+
+def plan_restore(cluster, name: str) -> RestorePlan:
+    """Build the one-shot ``RestorePlan`` (see class docstring).  Cheap
+    enough to build per restore request: one ``cluster.manifests`` call
+    (catalog-first) plus pure-metadata walks."""
+    loader = getattr(cluster, "load_catalog", None)
+    cat = loader(name) if loader is not None else None
+    mlist = cluster.manifests(name)
+    cands = _best_level_candidates(mlist)
+    manifests: dict[int, dict] = {}
+    parents: dict[int, Optional[int]] = {}
+    for m in mlist:
+        manifests.setdefault(m["version"], m)
+        if parents.get(m["version"]) is None:
+            parents[m["version"]] = m.get("parent")
+    packs: dict[int, str] = {}
+    if cat is not None:
+        for v, rec in cat["versions"].items():
+            parents.setdefault(v, rec.get("parent"))
+            if rec.get("pack"):
+                packs[v] = rec["pack"]
+    known = {m["version"] for m in mlist} | set(parents)
+    return RestorePlan(name, "catalog" if cat is not None else "scan",
+                       cands, manifests, parents, packs, known)
+
+
 def plan_restart(cluster, name: str) -> dict:
     """Catalog-first restart planner: everything a restore needs to know
     BEFORE fetching a single shard byte.
@@ -56,38 +136,13 @@ def plan_restart(cluster, name: str) -> dict:
                   entries live in a shared pack (loading the plan seeds
                   the cluster's pack-membership index, so subsequent
                   fetches skip the per-(tier, stream) key scan).
-    """
-    loader = getattr(cluster, "load_catalog", None)
-    cat = loader(name) if loader is not None else None
-    mlist = cluster.manifests(name)
-    cands = _best_level_candidates(mlist)
-    parents: dict[int, Optional[int]] = {}
-    for m in mlist:
-        if parents.get(m["version"]) is None:
-            parents[m["version"]] = m.get("parent")
-    kinds: dict[int, str] = {}
-    packs: dict[int, str] = {}
-    if cat is not None:
-        for v, rec in cat["versions"].items():
-            parents.setdefault(v, rec.get("parent"))
-            kinds[v] = rec.get("kind", "full")
-            if rec.get("pack"):
-                packs[v] = rec["pack"]
-    known = {m["version"] for m in mlist} | set(parents)
-    chains: dict[int, Optional[list[int]]] = {}
-    for c in cands:
-        chain = []
-        v: Optional[int] = c["version"]
-        ok = True
-        while v is not None:
-            if v in chain or len(chain) >= MAX_CHAIN_DEPTH or v not in known:
-                ok = False
-                break
-            chain.append(int(v))
-            v = parents.get(v)
-        chains[c["version"]] = chain if ok else None
-    return {"mode": "catalog" if cat is not None else "scan",
-            "candidates": cands, "chains": chains, "packs": packs}
+
+    Thin dict view over ``plan_restore`` (the loader-facing object)."""
+    plan = plan_restore(cluster, name)
+    return {"mode": plan.mode, "candidates": plan.candidates,
+            "chains": {c["version"]: plan.chain(c["version"])
+                       for c in plan.candidates},
+            "packs": plan.packs}
 
 
 def _manifest_for(cluster, name, version) -> Optional[dict]:
@@ -113,11 +168,18 @@ def _segment_hint(cluster, name: str, version: int) -> str:
         f"{d['tier']}:{d['key']}: {d['error']}" for d in diags) + ")"
 
 
+#: sentinel: "resolve the manifest yourself" (an explicit ``manifest=None``
+#: means the caller already knows the version has none)
+_UNRESOLVED = object()
+
+
 def fetch_shard_any_level(cluster, name: str, version: int, rank: int,
                           *, distance: int = 1,
-                          expected_digest: Optional[str] = None
-                          ) -> Optional[bytes]:
-    """Shard bytes from the cheapest healthy source."""
+                          expected_digest: Optional[str] = None,
+                          manifest=_UNRESOLVED) -> Optional[bytes]:
+    """Shard bytes from the cheapest healthy source.  Planned restores
+    pass ``manifest`` (possibly None) so the parity fallback never
+    re-resolves the stream's manifest list per hop."""
     from repro.kernels import ops as kops
 
     def ok(blob):
@@ -136,7 +198,8 @@ def fetch_shard_any_level(cluster, name: str, version: int, rank: int,
     if blob:
         return blob
     # L2b parity reconstruct
-    m = _manifest_for(cluster, name, version)
+    m = _manifest_for(cluster, name, version) if manifest is _UNRESOLVED \
+        else manifest
     g = (m or {}).get("group_size", 0) or getattr(cluster, "group_size", 0)
     g = min(g, cluster.nranks)
     if g >= 2:
@@ -178,21 +241,44 @@ def fetch_shard_any_level(cluster, name: str, version: int, rank: int,
 MAX_CHAIN_DEPTH = 64
 
 
-def load_rank_regions(cluster, name: str, version: int, rank: int,
-                      *, distance: int = 1, _depth: int = 0
-                      ) -> dict[str, np.ndarray]:
-    """{region_name: array} for one rank, verifying checksums.
+def _prefetch_chain(cluster, chain: list[int], rank: int, distance: int,
+                    plan: RestorePlan) -> Optional[dict]:
+    """Overlapped fetch of every chain hop through the cluster's bounded
+    reader pool.  Returns ``{version: (blob, error)}`` or None when no
+    pool is available (callers then fetch lazily hop-by-hop, stopping at
+    the rank's actual full base).  Errors on *speculative* deep hops are
+    harmless — the loader re-raises only for hops it truly needs."""
+    getter = getattr(cluster, "reader_pool", None)
+    pool = getter() if callable(getter) else None
+    if pool is None or len(chain) <= 1:
+        return None
 
-    Differential shards are reconstructed by walking ``parent`` links down
-    to a full base (each hop fetched from the cheapest healthy level, like
-    any other shard), then overlaying each delta's dirty chunks on the way
-    back up — per-chunk digests and the full-array digest are verified at
-    every overlay, so a corrupt or missing link anywhere in the chain raises
-    and the caller falls back to an older version."""
-    m = _manifest_for(cluster, name, version)
+    def mk(v):
+        def fetch():
+            return fetch_shard_any_level(
+                cluster, plan.name, v, rank, distance=distance,
+                expected_digest=plan.digest(v, rank),
+                manifest=plan.manifest(v))
+        return fetch
+
+    return dict(zip(chain, pool.run_all([mk(v) for v in chain])))
+
+
+def _load_rank_walk(cluster, name: str, version: int, rank: int,
+                    *, distance: int, _depth: int,
+                    plan: Optional[RestorePlan]) -> dict[str, np.ndarray]:
+    """The hop-by-hop recursive chain walk: the fallback when metadata
+    could not resolve the chain up front (dangling/cyclic parent links, a
+    version noted after the plan was built) — each hop's blob supplies
+    the next parent pointer."""
+    if plan is not None and int(version) in plan.known:
+        m = plan.manifest(version)
+    else:
+        m = _manifest_for(cluster, name, version)
     digest = (m or {}).get("shard_digests", {}).get(rank)
     blob = fetch_shard_any_level(cluster, name, version, rank,
-                                 distance=distance, expected_digest=digest)
+                                 distance=distance, expected_digest=digest,
+                                 manifest=m)
     if blob is None:
         raise IOError(f"rank {rank} shard unrecoverable for v{version}"
                       + _segment_hint(cluster, name, version))
@@ -208,8 +294,8 @@ def load_rank_regions(cluster, name: str, version: int, rank: int,
         parent = (m or {}).get("parent")
     if parent is None:
         raise IOError(f"delta shard v{version} has no parent link")
-    base = load_rank_regions(cluster, name, int(parent), rank,
-                             distance=distance, _depth=_depth + 1)
+    base = _load_rank_walk(cluster, name, int(parent), rank,
+                           distance=distance, _depth=_depth + 1, plan=plan)
     out = {}
     for n in reader.region_names:
         if n in delta_names:
@@ -222,38 +308,147 @@ def load_rank_regions(cluster, name: str, version: int, rank: int,
     return out
 
 
+def load_rank_regions(cluster, name: str, version: int, rank: int,
+                      *, distance: int = 1,
+                      plan: Optional[RestorePlan] = None
+                      ) -> dict[str, np.ndarray]:
+    """{region_name: array} for one rank, verifying checksums.
+
+    Differential shards are reconstructed by walking ``parent`` links down
+    to a full base (each hop fetched from the cheapest healthy level, like
+    any other shard), then overlaying each delta's dirty chunks on the way
+    back up — per-chunk digests and the full-array digest are verified at
+    every overlay, so a corrupt or missing link anywhere in the chain
+    raises and the caller falls back to an older version.
+
+    The chain is resolved up front from ``plan`` (built here when not
+    passed) — zero per-hop manifest re-resolution — and, when the cluster
+    has a reader pool, all hops are fetched CONCURRENTLY while the
+    overlay still applies bottom-up.  Metadata the plan could not resolve
+    degrades to the per-hop blob walk, never to an error."""
+    if plan is None:
+        plan = plan_restore(cluster, name)
+    chain = plan.chain(version)
+    if chain is None:
+        return _load_rank_walk(cluster, name, version, rank,
+                               distance=distance, _depth=0, plan=plan)
+    fetched = _prefetch_chain(cluster, chain, rank, distance, plan)
+    hops: list[tuple[int, fmt.ShardReader]] = []  # target-first
+    base_found = False
+    for v in chain:
+        if fetched is not None:
+            blob, err = fetched[v]
+            if err is not None:
+                raise err
+        else:
+            blob = fetch_shard_any_level(
+                cluster, name, v, rank, distance=distance,
+                expected_digest=plan.digest(v, rank),
+                manifest=plan.manifest(v))
+        if blob is None:
+            raise IOError(f"rank {rank} shard unrecoverable for v{v}"
+                          + _segment_hint(cluster, name, v))
+        reader = fmt.ShardReader(blob)
+        hops.append((v, reader))
+        if not reader.delta_regions():
+            base_found = True
+            break
+    if base_found:
+        prev_v, base_reader = hops.pop()
+        out = {n: base_reader.read(n) for n in base_reader.region_names}
+    else:
+        # metadata called the deepest hop the full base but this RANK's
+        # blob is still a delta (ranks go full independently; links can
+        # be stale) — extend through the blob's own parent pointer.
+        deep_v, deep_reader = hops[-1]
+        prev_v = (deep_reader.meta.get("delta") or {}).get("parent")
+        if prev_v is None:
+            prev_v = (plan.manifest(deep_v) or {}).get("parent")
+        if prev_v is None:
+            raise IOError(f"delta shard v{deep_v} has no parent link")
+        out = _load_rank_walk(cluster, name, int(prev_v), rank,
+                              distance=distance, _depth=len(hops),
+                              plan=plan)
+    for v, reader in reversed(hops):
+        delta_names = set(reader.delta_regions())
+        nxt = {}
+        for n in reader.region_names:
+            if n in delta_names:
+                if n not in out:
+                    raise IOError(f"delta region {n!r} of v{v} missing "
+                                  f"from parent v{prev_v}")
+                nxt[n] = reader.read(n, base=out[n])
+            else:
+                nxt[n] = reader.read(n)
+        out = nxt
+        prev_v = v
+    return out
+
+
 def chain_versions(cluster, name: str, version: int, rank: int = 0,
-                   *, distance: int = 1) -> list[int]:
+                   *, distance: int = 1,
+                   plan: Optional[RestorePlan] = None) -> list[int]:
     """The delta chain of ``version``, newest first, ending at its full
-    base — [version] when the shard is already full."""
-    out = []
-    seen = set()
+    base — [version] when the shard is already full.
+
+    Resolved from manifest/catalog parent links — zero shard-blob
+    downloads on the metadata path; a hop with no metadata at all falls
+    back to reading that blob's own parent pointer (the pre-planner
+    behaviour, hop by hop)."""
+    if plan is None:
+        plan = plan_restore(cluster, name)
+    out: list[int] = []
+    seen: set = set()
     v: Optional[int] = version
     while v is not None:
         if int(v) in seen or len(out) >= MAX_CHAIN_DEPTH:
             raise IOError(f"delta chain exceeds {MAX_CHAIN_DEPTH} links or "
                           f"cycles at v{v} (corrupt parent metadata)")
-        seen.add(int(v))
-        out.append(int(v))
-        m = _manifest_for(cluster, name, v)
-        digest = (m or {}).get("shard_digests", {}).get(rank)
+        v = int(v)
+        seen.add(v)
+        out.append(v)
+        if v in plan.known:
+            v = plan.parents.get(v)
+            continue
+        # no metadata for this hop: the blob itself carries the pointer
         blob = fetch_shard_any_level(cluster, name, v, rank,
-                                     distance=distance, expected_digest=digest)
+                                     distance=distance, manifest=None)
         if blob is None:
             raise IOError(f"chain walk: v{v} unrecoverable")
         reader = fmt.ShardReader(blob)
         if not reader.delta_regions():
             break
         v = (reader.meta.get("delta") or {}).get("parent")
-        if v is None:
-            v = (m or {}).get("parent")
     return out
 
 
 def load_all_regions(cluster, name: str, version: int, *, distance: int = 1
                      ) -> dict[int, dict[str, np.ndarray]]:
-    return {r: load_rank_regions(cluster, name, version, r, distance=distance)
-            for r in range(cluster.nranks)}
+    """Every rank's regions, sharing ONE plan — and, when the cluster has
+    a reader pool, loading ranks concurrently (hop fetches within each
+    rank then run inline: the pool's workers are the bound)."""
+    plan = plan_restore(cluster, name)
+    ranks = list(range(cluster.nranks))
+    getter = getattr(cluster, "reader_pool", None)
+    pool = getter() if callable(getter) else None
+    if pool is None or len(ranks) <= 1:
+        return {r: load_rank_regions(cluster, name, version, r,
+                                     distance=distance, plan=plan)
+                for r in ranks}
+
+    def mk(r):
+        def load():
+            return load_rank_regions(cluster, name, version, r,
+                                     distance=distance, plan=plan)
+        return load
+
+    results = pool.run_all([mk(r) for r in ranks])
+    out = {}
+    for r, (regions, err) in zip(ranks, results):
+        if err is not None:
+            raise err
+        out[r] = regions
+    return out
 
 
 # ---------------------------------------------------------------------------

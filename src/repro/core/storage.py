@@ -92,6 +92,16 @@ class StorageTier:
     def busy(self) -> int:
         return self._inflight
 
+    def reset_io_counters(self) -> None:
+        """Zero the lifetime put/get/delete/keys counters so a benchmark
+        or test can audit one phase in isolation (e.g. "this restore
+        performed zero listings") without tracking deltas by hand."""
+        with self._lock:
+            self.put_calls = 0
+            self.get_calls = 0
+            self.delete_calls = 0
+            self.keys_calls = 0
+
     def _enter(self):
         concurrency.note_tier_io(self, "put")
         with self._lock:

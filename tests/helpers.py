@@ -8,6 +8,8 @@ delegate everything else to the wrapped tier, so they drop into a built
 """
 from __future__ import annotations
 
+import threading
+import time
 from typing import Callable, Optional
 
 from repro.core.storage import StorageTier
@@ -73,6 +75,35 @@ class FlakyTier(WrappedTier):
         if self.fail_gets and self._should_fail(key, self.failed_gets):
             raise IOError(f"injected get failure on {self.info.name}:{key}")
         return self.inner.get(key)
+
+
+class CountingTier(WrappedTier):
+    """Per-key ``get`` accounting plus a concurrent-get high-water mark.
+    The restore-serving tests assert that N concurrent readers cost the
+    external tier exactly ONE get per segment/pack blob (shared cache,
+    single-flight) and that chain-hop fetches actually overlap.
+    ``hold_s`` stretches each get to widen the overlap window."""
+
+    def __init__(self, inner: StorageTier, *, hold_s: float = 0.0):
+        super().__init__(inner)
+        self.get_counts: dict[str, int] = {}
+        self.max_inflight = 0
+        self.hold_s = hold_s
+        self._inflight = 0
+        self._mu = threading.Lock()
+
+    def get(self, key):
+        with self._mu:
+            self.get_counts[key] = self.get_counts.get(key, 0) + 1
+            self._inflight += 1
+            self.max_inflight = max(self.max_inflight, self._inflight)
+        try:
+            if self.hold_s:
+                time.sleep(self.hold_s)
+            return self.inner.get(key)
+        finally:
+            with self._mu:
+                self._inflight -= 1
 
 
 class CorruptingTier(WrappedTier):
