@@ -18,6 +18,12 @@ scale with the scaling factor stated in the ``derived`` column.
   bench_delta     incremental (differential) checkpointing: bytes written
                   per checkpoint and blocking time, full vs delta shards on
                   a 1%-dirty workload (write amplification).
+  bench_device_delta  device-side dirty tracking: fused fingerprint-diff
+                  in HBM + device gather, so only dirty chunks cross the
+                  device/host boundary — measured D2H bytes per checkpoint
+                  and kernel dispatches per patch over a 1%/10%/50% dirty
+                  sweep (>=5x D2H cut at 1% and >=10x dispatch batching
+                  asserted in-bench).
   bench_aggregation  aggregated write path: many small delta shards (8
                   ranks x 8 regions, ~1% dirty) coalesced into one segment
                   put per version — L3 puts/version and flush wall time,
@@ -300,6 +306,72 @@ def bench_delta():
     row("delta_on_per_ckpt_8MB_1pct", delta_t * 1e6,
         f"{delta_b / 1e6:.2f}MBwritten,write_amp={full_b / delta_b:.1f}x,"
         f"blocking={delta_t * 1e3:.1f}ms")
+
+
+def bench_device_delta():
+    """Device-side dirty tracking: fingerprints stay resident in HBM, one
+    fused Pallas pass hashes + diffs, and a device-side gather packs dirty
+    chunks contiguously so the D2H copy moves ``dirty_ratio * bytes``.
+    Sweeps 1% / 10% / 50% dirty and reports measured device->host bytes per
+    checkpoint (from the capture's transfer counters) against the host
+    path's full materialization, plus kernel dispatches per patch.  The
+    acceptance bounds are asserted in-bench: >=5x D2H reduction at 1%
+    dirty, >=10x fewer dispatches than one-per-dirty-chunk at 256+ dirty
+    chunks — a regression fails CI, not just the trajectory plot."""
+    from repro.core import VelocClient, VelocConfig
+    from repro.kernels import ops as kops
+
+    chunk = 16 * 1024
+    n = (16 << 20) // 4                    # 16 MB f32 -> 1024 chunks
+    rows = (n * 4) // chunk
+    rng = np.random.default_rng(0)
+    w0 = rng.standard_normal(n).astype(np.float32)
+    steps = 4
+
+    for pct in (1, 10, 50):
+        root = f"/tmp/veloc_bench_ddelta_{pct}"
+        shutil.rmtree(root, ignore_errors=True)
+        client = VelocClient(VelocConfig(
+            scratch=root, mode="sync", delta=True, device_delta=True,
+            delta_chunk_bytes=chunk, delta_max_chain=64, partner=False,
+            xor_group=0, flush=True, keep_versions=10))
+        cap = client.device_capture
+        n_dirty = max(1, rows * pct // 100)
+        w = np.array(w0)
+        client.checkpoint({"w": jnp.asarray(w)}, version=1,
+                          device_snapshot=False)
+        d2h = disp = 0
+        times = []
+        for v in range(2, 2 + steps):
+            w = w.copy()
+            flat = w.view(np.uint8)
+            for c in range(n_dirty):  # rotate the dirty window per step
+                flat[((c + v) % rows) * chunk] ^= 0xFF
+            leaf = jnp.asarray(w)
+            b0 = cap.stats["d2h_bytes"]
+            k0 = sum(kops.KERNEL_DISPATCHES.values())
+            t0 = time.perf_counter()
+            fut = client.checkpoint({"w": leaf}, version=v,
+                                    device_snapshot=False)
+            times.append(time.perf_counter() - t0)
+            assert fut.results["delta_kind"] == "delta", fut.results
+            d2h += cap.stats["d2h_bytes"] - b0
+            disp += sum(kops.KERNEL_DISPATCHES.values()) - k0
+        client.shutdown()
+        d2h_per_ckpt = d2h / steps
+        disp_per_ckpt = disp / steps
+        reduction = w0.nbytes / d2h_per_ckpt
+        if pct == 1:
+            assert reduction >= 5.0, (
+                f"device delta must cut D2H >=5x at 1% dirty, got "
+                f"{reduction:.1f}x ({d2h_per_ckpt:.0f}B vs {w0.nbytes}B)")
+        if n_dirty >= 256:
+            assert disp_per_ckpt * 10 <= n_dirty, (
+                f"expected >=10x fewer dispatches than dirty chunks: "
+                f"{disp_per_ckpt:.1f} dispatches for {n_dirty} chunks")
+        row(f"device_delta_16MB_{pct}pct", np.mean(times) * 1e6,
+            f"{d2h_per_ckpt / 1e6:.3f}MBd2h,reduction={reduction:.1f}x,"
+            f"dispatches={disp_per_ckpt:.1f},dirty_chunks={n_dirty}")
 
 
 def bench_aggregation():
@@ -746,7 +818,8 @@ def bench_lock_overhead():
 
 
 ALL_BENCHES = (bench_levels, bench_engine, bench_erasure, bench_capture,
-               bench_async, bench_delta, bench_aggregation, bench_packing,
+               bench_async, bench_delta, bench_device_delta,
+               bench_aggregation, bench_packing,
                bench_restart, bench_restore_serving, bench_interval,
                bench_scale,
                bench_lock_overhead)

@@ -33,7 +33,8 @@ from typing import Any, Callable, Optional, Union
 from repro.core import concurrency
 from repro.core import format as fmt
 from repro.core.backend import ActiveBackend, RateLimiter
-from repro.core.capture import iter_host_regions, snapshot_device, tree_from_regions
+from repro.core.capture import (DeviceDeltaCapture, iter_host_regions,
+                                snapshot_device, tree_from_regions)
 from repro.core.future import CheckpointFuture
 from repro.core.modules import CheckpointContext
 from repro.core.phases import EMAPhasePredictor, GRUPhasePredictor
@@ -67,6 +68,9 @@ class VelocConfig:
     delta: bool = False                 # incremental (differential) shards
     delta_chunk_bytes: int = 64 * 1024  # dirty-detection granularity
     delta_max_chain: int = 8            # deltas before a forced full shard
+    device_delta: bool = False          # fingerprint-diff jax arrays in HBM
+    #                                     and gather only dirty chunks over
+    #                                     PCIe (requires delta=True)
     aggregate: bool = False             # coalesce L3 blobs into one segment
     pack_versions: int = 0              # >=2: pack that many consecutive
     #                                     delta versions into one rolling
@@ -116,6 +120,10 @@ class VelocConfig:
             mods.insert(1, ModuleSpec("delta", {
                 "chunk_bytes": self.delta_chunk_bytes,
                 "max_chain": self.delta_max_chain}))
+        elif self.device_delta:
+            raise ValueError("device_delta=True requires delta=True (the "
+                             "device diff lands in the delta module's "
+                             "tracker/chain)")
         if self.partner:
             mods.append(ModuleSpec("partner",
                                    {"distance": self.partner_distance}))
@@ -138,7 +146,8 @@ class VelocConfig:
                             seal_backoff_base_s=self.seal_backoff_base_s,
                             seal_backoff_cap_s=self.seal_backoff_cap_s,
                             compact_threshold=self.compact_threshold,
-                            compact_async=self.compact_async)
+                            compact_async=self.compact_async,
+                            device_delta=self.device_delta)
 
     def to_tier_topology(self) -> TierTopology:
         """Compile the storage switches into the declarative tier layout
@@ -1916,6 +1925,15 @@ class VelocClient:
             "client._compact_lock", concurrency.RANK_CLIENT)
         self._compact_pending = False
         self.engine = spec.compile(backend=self.backend)
+        #: device-side dirty tracking: fingerprints stay resident in HBM and
+        #: only dirty chunks cross PCIe (spec.device_delta, requires delta)
+        self.device_capture: Optional[DeviceDeltaCapture] = None
+        if spec.device_delta:
+            dopts = spec.module_options("delta") or {}
+            kw = {}
+            if "chunk_bytes" in dopts:
+                kw["chunk_bytes"] = dopts["chunk_bytes"]
+            self.device_capture = DeviceDeltaCapture(**kw)
         self._history: list[dict] = []
         #: (version, level, error) entries for every restore candidate that
         #: was tried and failed during the last ``restart_latest`` call.
@@ -1940,7 +1958,8 @@ class VelocClient:
         """Stage every protected region (host copy of current values)."""
         assert self._open_version is not None
         for name, value in self._protected.items():
-            for r in iter_host_regions(value, rank_prefix=f"{name}/"):
+            for r in iter_host_regions(value, rank_prefix=f"{name}/",
+                                       device_delta=self.device_capture):
                 self._staged.append(r)
 
     def checkpoint_end(self, *, defensive: bool = True, meta=None
@@ -1965,10 +1984,12 @@ class VelocClient:
         t0 = time.monotonic()
         if snap is None:
             snap = snapshot_device(state) if device_snapshot else state
+        cap = self.device_capture
         if self.spec.mode == "async":
-            regions: Any = lambda: list(iter_host_regions(snap))
+            regions: Any = lambda: list(iter_host_regions(
+                snap, device_delta=cap))
         else:
-            regions = list(iter_host_regions(snap))
+            regions = list(iter_host_regions(snap, device_delta=cap))
         fut = self._submit(regions, version, defensive=defensive, meta=meta)
         fut.results["app_blocking_s"] = time.monotonic() - t0
         return fut

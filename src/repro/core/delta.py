@@ -23,7 +23,6 @@ DeltaModule and the restart chain-walk rely on.
 """
 from __future__ import annotations
 
-import io
 import json
 from dataclasses import dataclass, field
 from typing import Optional
@@ -59,6 +58,26 @@ class DeltaPatch:
         return -(-self.nbytes // self.chunk_bytes) if self.nbytes else 0
 
 
+@dataclass
+class PrecomputedDiff:
+    """A diff the capture layer already computed ON DEVICE (fused
+    fingerprint-diff + gather in HBM — repro.core.capture.DeviceDeltaCapture):
+    ``make_patch`` packs it into a DeltaPatch verbatim instead of re-hashing
+    and re-copying bytes the device already diffed."""
+
+    shape: tuple
+    dtype: str
+    nbytes: int
+    chunk_bytes: int
+    indices: np.ndarray         # (n_dirty,) int64, sorted ascending
+    data: bytes                 # gathered dirty chunks (tail may be short)
+    chunk_digests: list
+    full_digest: str
+    fps: np.ndarray             # host copy of the new fingerprints (tracker
+    #                             state — keeps the host diff path viable if
+    #                             device capture is later disabled)
+
+
 def fingerprints(buf: bytes | np.ndarray,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> np.ndarray:
     """(n_chunks, 2) uint32 per-chunk fingerprints (Pallas block hash)."""
@@ -79,28 +98,48 @@ def _chunk_slices(nbytes: int, chunk_bytes: int, idx: int) -> slice:
     return slice(lo, min(lo + chunk_bytes, nbytes))
 
 
-def make_patch(arr: np.ndarray, prev_fp: Optional[np.ndarray], *,
-               chunk_bytes: int = DEFAULT_CHUNK_BYTES, base_version: int = -1
+def make_patch(arr: Optional[np.ndarray], prev_fp: Optional[np.ndarray], *,
+               chunk_bytes: int = DEFAULT_CHUNK_BYTES, base_version: int = -1,
+               precomputed: Optional[PrecomputedDiff] = None
                ) -> tuple[DeltaPatch, np.ndarray]:
     """Diff ``arr`` against ``prev_fp`` -> (patch, new fingerprints).
 
     The patch contains every chunk when ``prev_fp`` is None (full rewrite);
     callers decide whether serializing it as a delta still pays off (see
-    DeltaModule's dirty-ratio cutoff)."""
+    DeltaModule's dirty-ratio cutoff).
+
+    With ``precomputed`` (device-side dirty tracking), the diff was already
+    taken in HBM and only the dirty chunks crossed PCIe — the patch is
+    packed from it directly, no host hashing or copying (``arr`` and
+    ``prev_fp`` are unused and may be None)."""
+    if precomputed is not None:
+        p = precomputed
+        patch = DeltaPatch(shape=tuple(p.shape), dtype=p.dtype,
+                           nbytes=p.nbytes, chunk_bytes=p.chunk_bytes,
+                           base_version=base_version,
+                           indices=np.asarray(p.indices, np.int64),
+                           data=p.data, chunk_digests=list(p.chunk_digests),
+                           full_digest=p.full_digest)
+        return patch, p.fps
     arr = np.ascontiguousarray(arr)
-    raw = arr.tobytes()
+    raw = arr.reshape(-1).view(np.uint8)  # zero-copy byte view
+    nbytes = raw.shape[0]
     new_fp = fingerprints(raw, chunk_bytes)
     idx = dirty_chunks(new_fp, prev_fp)
-    out = io.BytesIO()
-    digests = []
-    for i in idx:
-        blob = raw[_chunk_slices(len(raw), chunk_bytes, int(i))]
-        digests.append(kops.digest(blob))
-        out.write(blob)
+    # slice dirty chunks through the view (no full-buffer duplicate), batch
+    # all their digests into one checksum-kernel dispatch, and copy only the
+    # dirty bytes into the patch payload.
+    views = [raw[_chunk_slices(nbytes, chunk_bytes, int(i))] for i in idx]
+    digests = kops.chunk_digests(views)
+    packed = np.empty(int(sum(v.shape[0] for v in views)), np.uint8)
+    off = 0
+    for v in views:
+        packed[off:off + v.shape[0]] = v
+        off += v.shape[0]
     patch = DeltaPatch(shape=tuple(arr.shape), dtype=str(arr.dtype),
-                       nbytes=len(raw), chunk_bytes=chunk_bytes,
+                       nbytes=nbytes, chunk_bytes=chunk_bytes,
                        base_version=base_version, indices=idx,
-                       data=out.getvalue(), chunk_digests=digests,
+                       data=packed.tobytes(), chunk_digests=digests,
                        full_digest=kops.digest(raw))
     return patch, new_fp
 
@@ -145,18 +184,26 @@ def overlay(base: np.ndarray, patch: DeltaPatch, *, verify: bool = True
         raise IOError(f"delta base is {len(buf)}B, patch expects "
                       f"{patch.nbytes}B")
     off = 0
+    data = memoryview(patch.data)
+    spans: list[tuple[int, int, slice, memoryview]] = []
     for j, i in enumerate(patch.indices):
         sl = _chunk_slices(patch.nbytes, patch.chunk_bytes, int(i))
         n = sl.stop - sl.start
-        chunk = patch.data[off:off + n]
+        chunk = data[off:off + n]
         if len(chunk) != n:
             raise IOError(f"delta chunk {int(i)} truncated "
                           f"({len(chunk)}B < {n}B)")
-        if verify and patch.chunk_digests and \
-                kops.digest(chunk) != patch.chunk_digests[j]:
-            raise IOError(f"delta chunk {int(i)} checksum mismatch")
-        buf[sl] = chunk
+        spans.append((j, int(i), sl, chunk))
         off += n
+    if verify and patch.chunk_digests:
+        # one checksum-kernel dispatch for every chunk's digest, not one per
+        # chunk (same batching as make_patch)
+        got = kops.chunk_digests([c for (_, _, _, c) in spans])
+        for (j, i, _, _), d in zip(spans, got):
+            if d != patch.chunk_digests[j]:
+                raise IOError(f"delta chunk {i} checksum mismatch")
+    for _, _, sl, chunk in spans:
+        buf[sl] = chunk
     out = np.frombuffer(bytes(buf), np.dtype(patch.dtype)).reshape(patch.shape)
     if verify and patch.full_digest and \
             kops.digest(out) != patch.full_digest:

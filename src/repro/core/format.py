@@ -27,7 +27,7 @@ import io
 import json
 import zlib
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Optional
 
 import numpy as np
 
@@ -39,7 +39,7 @@ MAGIC = b"VELOCJX1"
 @dataclass
 class Region:
     name: str
-    array: np.ndarray
+    array: Optional[np.ndarray]
     # global layout metadata for elastic restart:
     global_shape: tuple = ()
     shard_axis: int = -1  # axis this rank's piece slices (-1 = replicated)
@@ -48,6 +48,12 @@ class Region:
     #: set by the delta pipeline module: serialize only the dirty chunks of
     #: this region (a repro.core.delta.DeltaPatch) instead of its bytes.
     patch: Any = None
+    #: device-side dirty tracking (repro.core.capture): the UNMATERIALIZED
+    #: device array + the DeviceDeltaCapture that diffs it in HBM.  When
+    #: set with ``array=None``, the delta module either attaches a patch
+    #: (only dirty chunks ever cross PCIe) or materializes ``array``.
+    leaf: Any = None
+    capture: Any = None
 
 
 def serialize_shard(regions: list[Region], meta: dict, *, encoding: str = "raw",
@@ -55,8 +61,40 @@ def serialize_shard(regions: list[Region], meta: dict, *, encoding: str = "raw",
     payload = io.BytesIO()
     table = []
     for r in regions:
-        arr = np.ascontiguousarray(r.array)
-        entry: dict[str, Any] = {
+        if r.patch is not None:
+            # differential region: only the dirty chunks travel; the reader
+            # needs the parent version's array to reconstruct (read(base=)).
+            # Deliberately does NOT touch r.array — a device-delta region
+            # reaches here with array=None and its bytes still in HBM.
+            from repro.core import delta as _delta
+
+            p = r.patch
+            table.append({
+                "name": r.name,
+                "shape": list(p.shape),
+                "dtype": p.dtype,
+                "global_shape": list(r.global_shape or tuple(p.shape)),
+                "shard_axis": r.shard_axis,
+                "shard_index": r.shard_index,
+                "shard_count": r.shard_count,
+                "encoding": "delta",
+                "base_version": p.base_version,
+            })
+            blob = _delta.encode_patch(p)
+            entry = table[-1]
+            if checksums:
+                entry["digest"] = kops.digest(blob)
+            entry["offset"] = payload.tell()
+            entry["nbytes"] = len(blob)
+            payload.write(blob)
+            continue
+        arr = r.array
+        if arr is None and r.leaf is not None:
+            # guard: a device-delta region that bypassed the delta module
+            # (e.g. module toggled off) still serializes correctly
+            arr = np.asarray(r.leaf)
+        arr = np.ascontiguousarray(arr)
+        entry = {
             "name": r.name,
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
@@ -66,15 +104,7 @@ def serialize_shard(regions: list[Region], meta: dict, *, encoding: str = "raw",
             "shard_count": r.shard_count,
             "encoding": encoding,
         }
-        if r.patch is not None:
-            # differential region: only the dirty chunks travel; the reader
-            # needs the parent version's array to reconstruct (read(base=)).
-            from repro.core import delta as _delta
-
-            entry["encoding"] = "delta"
-            entry["base_version"] = r.patch.base_version
-            blob = _delta.encode_patch(r.patch)
-        elif encoding == "q8" and arr.dtype.kind == "f" and arr.size >= 1024:
+        if encoding == "q8" and arr.dtype.kind == "f" and arr.size >= 1024:
             q, s, n, shape = kops.quantize(arr)
             blob = (np.int64(q.shape[0]).tobytes() + np.int64(q.shape[1]).tobytes()
                     + q.tobytes() + s.tobytes())

@@ -164,10 +164,24 @@ class DeltaModule(Module):
                             ctx.name, t.last_version, ctx.rank))
             want_full = t.empty or stale or orphaned \
                 or t.chain_len >= self.max_chain
+            stream = (ctx.name, ctx.rank)
             new_fps: dict[str, np.ndarray] = {}
             patches: dict[str, dlt.DeltaPatch] = {}
+            #: device-delta regions: name -> (region, plan, capture).  Their
+            #: diff runs in HBM (fused fingerprint-diff kernel) and — unlike
+            #: the host path — NO bytes cross PCIe until the dirty-ratio
+            #: decision below picks gather or materialize.
+            plans: dict[str, tuple] = {}
             dirty = total = 0
             for r in ctx.regions:
+                cap = getattr(r, "capture", None)
+                if cap is not None and r.array is None:
+                    plan = cap.plan(stream, r.name, r.leaf,
+                                    force_full=want_full)
+                    plans[r.name] = (r, plan, cap)
+                    total += plan.nbytes
+                    dirty += plan.dirty_bytes
+                    continue
                 arr = np.ascontiguousarray(r.array)
                 prev = None if want_full else t.fps.get(r.name)
                 if prev is None:
@@ -186,15 +200,34 @@ class DeltaModule(Module):
             if want_full or ratio > self.max_dirty_ratio:
                 for r in ctx.regions:
                     r.patch = None
+                for name, (r, plan, cap) in plans.items():
+                    r.array = cap.materialize(plan)
+                    new_fps[name] = cap.host_fp(plan)
+                    cap.commit(plan)
                 ctx.meta["delta"] = {"kind": "full"}
                 t.note_full(ctx.version, new_fps)
                 ctx.results["delta_kind"] = "full"
             else:
                 for r in ctx.regions:
+                    if r.name in plans:
+                        continue
                     p = patches.get(r.name)
                     # fully-dirty regions encode raw (no table overhead)
                     r.patch = None if p is None or \
                         len(p.indices) >= p.n_chunks else p
+                for name, (r, plan, cap) in plans.items():
+                    if plan.full or len(plan.dirty_idx) >= plan.rows:
+                        # first version / reshard fallback / fully dirty:
+                        # ship the whole region, encode raw
+                        r.array = cap.materialize(plan)
+                        r.patch = None
+                        new_fps[name] = cap.host_fp(plan)
+                    else:
+                        diff = cap.gather(plan)
+                        r.patch, new_fps[name] = dlt.make_patch(
+                            None, None, chunk_bytes=self.chunk_bytes,
+                            base_version=t.last_version, precomputed=diff)
+                    cap.commit(plan)
                 ctx.meta["delta"] = {
                     "kind": "delta", "parent": t.last_version,
                     "base": t.base_version, "chain_len": t.chain_len + 1}
@@ -203,6 +236,8 @@ class DeltaModule(Module):
             ctx.results["delta_dirty_bytes"] = dirty
             ctx.results["delta_total_bytes"] = total
             ctx.results["delta_dirty_ratio"] = round(ratio, 4)
+            if plans:
+                ctx.results["delta_device_regions"] = len(plans)
         return "ok"
 
 

@@ -145,6 +145,11 @@ class PipelineSpec:
     #: run auto-compaction (and the follow-up parity refresh) in the
     #: backend's maintenance lane instead of inline in checkpoint_end
     compact_async: bool = False
+    #: device-side dirty tracking: fingerprint-diff protected jax arrays in
+    #: HBM (fused Pallas pass) and gather only dirty chunks across PCIe.
+    #: Requires the "delta" module (the diff needs a tracker/chain to land
+    #: in); host-resident and resharded leaves fall back to the host path.
+    device_delta: bool = False
     #: min seconds between maintenance-lane task starts (rate limit)
     maintenance_interval_s: float = 0.0
 
@@ -190,6 +195,13 @@ class PipelineSpec:
         mode (None runs the full pipeline inline)."""
         from repro.core.engine import Engine
 
+        if self.device_delta and \
+                not any(ms.name == "delta" for ms in self.modules):
+            # device capture produces PrecomputedDiffs; only DeltaModule
+            # turns them into patches — without it they'd silently become
+            # full materializations every step.
+            raise ValueError(
+                'device_delta=True requires the "delta" module')
         if any(ms.name == "delta" for ms in self.modules):
             enc = (self.module_options("serialize") or {}).get("encoding",
                                                                "raw")

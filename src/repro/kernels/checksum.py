@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 CHUNK_WORDS = 2048
 BLOCK_ROWS = 64  # 64 x 2048 x 4B = 512 KiB per tile
@@ -57,8 +58,10 @@ _MIX2 = 0x85EBCA77
 _MIX3 = 0xC2B2AE3D
 
 
-def _blockhash_kernel(x_ref, o_ref):
-    x = x_ref[:, :]  # (block_rows, chunk) uint32
+def _blockhash_rows(x):
+    """Per-row mixed fingerprint pair of a (rows, chunk) uint32 tile —
+    the shared body of the plain and fused-diff block-hash kernels (both
+    must emit bit-identical fingerprints)."""
     rows, chunk = x.shape
     i = jax.lax.broadcasted_iota(jnp.uint32, (rows, chunk), 1)
     # per-word avalanche, then two independent position-weighted reductions
@@ -69,6 +72,11 @@ def _blockhash_kernel(x_ref, o_ref):
     w2 = (i + jnp.uint32(1)) * jnp.uint32(_MIX3) | jnp.uint32(1)
     h1 = jnp.sum(y * w1, axis=1, dtype=jnp.uint32)
     h2 = jnp.sum((y ^ w2) * w2, axis=1, dtype=jnp.uint32)
+    return h1, h2
+
+
+def _blockhash_kernel(x_ref, o_ref):
+    h1, h2 = _blockhash_rows(x_ref[:, :])
     o_ref[:, 0] = h1
     o_ref[:, 1] = h2
 
@@ -88,3 +96,74 @@ def blockhash_pallas(x: jax.Array, *, block_rows: int = BLOCK_ROWS,
         out_specs=pl.BlockSpec((block_rows, 2), lambda i: (i, 0)),
         interpret=interpret,
     )(x)
+
+
+# ---------------------------------------------------------------------------
+# fused fingerprint + diff (device-side dirty tracking)
+# ---------------------------------------------------------------------------
+
+
+def _blockhash_diff_kernel(x_ref, prev_ref, fp_ref, dirty_ref):
+    h1, h2 = _blockhash_rows(x_ref[:, :])
+    fp_ref[:, 0] = h1
+    fp_ref[:, 1] = h2
+    prev = prev_ref[:, :]  # (block_rows, 2) uint32 — resident in HBM
+    dirty = (h1 != prev[:, 0]) | (h2 != prev[:, 1])
+    dirty_ref[:, 0] = dirty.astype(jnp.uint32)
+
+
+def blockhash_diff_pallas(x: jax.Array, prev_fp: jax.Array, *,
+                          block_rows: int = BLOCK_ROWS,
+                          interpret: bool = True
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Fused dirty detection: block-hash ``x`` AND compare against the
+    previous fingerprints in one grid walk.
+
+    x: (n_chunks, chunk) uint32, prev_fp: (n_chunks, 2) uint32 ->
+    (new_fp (n_chunks, 2) uint32, dirty (n_chunks, 1) uint32 0/1).
+
+    The fingerprint inputs never leave device memory — only the chunk-sized
+    dirty mask (and whatever chunks it selects) need to cross PCIe."""
+    n, chunk = x.shape
+    assert prev_fp.shape == (n, 2), (prev_fp.shape, n)
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0, (n, block_rows)
+    return pl.pallas_call(
+        _blockhash_diff_kernel,
+        out_shape=(jax.ShapeDtypeStruct((n, 2), jnp.uint32),
+                   jax.ShapeDtypeStruct((n, 1), jnp.uint32)),
+        grid=(n // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, chunk), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 2), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((block_rows, 2), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows, 1), lambda i: (i, 0))),
+        interpret=interpret,
+    )(x, prev_fp)
+
+
+def _gather_rows_kernel(idx_ref, x_ref, o_ref):
+    del idx_ref  # consumed by the index map (scalar prefetch)
+    o_ref[...] = x_ref[...]
+
+
+def gather_rows_pallas(x: jax.Array, idx: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """Device-side compaction: pack rows ``idx`` of ``x`` contiguously.
+
+    x: (n_chunks, chunk), idx: (n_out,) int32 -> (n_out, chunk).  The index
+    vector rides in scalar-prefetch memory, so the grid walk DMAs exactly
+    the selected chunk rows — the D2H transfer of the result is
+    ``dirty_ratio * bytes``, not ``bytes``."""
+    n_out = int(idx.shape[0])
+    chunk = x.shape[1]
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_out,),
+            in_specs=[pl.BlockSpec((1, chunk), lambda i, idx_ref: (idx_ref[i], 0))],
+            out_specs=pl.BlockSpec((1, chunk), lambda i, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_out, chunk), x.dtype),
+        interpret=interpret,
+    )(idx, x)

@@ -21,6 +21,11 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+#: Lifetime kernel-dispatch counters (benchmarks and tests read deltas to
+#: assert batching actually collapses per-chunk dispatches into one).
+KERNEL_DISPATCHES = {"checksum": 0, "blockhash": 0, "gather": 0}
+
+
 def _pad_to(x: np.ndarray | jax.Array, mult: int):
     n = x.shape[-1]
     pad = (-n) % mult
@@ -87,6 +92,7 @@ def fletcher_chunks(words: jax.Array | np.ndarray,
     w = jnp.asarray(words)
     if w.shape[0] == 0:
         return np.zeros((0, 2), np.uint32)
+    KERNEL_DISPATCHES["checksum"] += 1
     rows = -(-w.shape[0] // chunk)
     rows_pad = -(-rows // _ck.BLOCK_ROWS) * _ck.BLOCK_ROWS
     total = rows_pad * chunk
@@ -122,17 +128,137 @@ def block_fingerprints(buf: bytes | np.ndarray,
     w = jnp.asarray(words)
     if total != w.shape[0]:
         w = jnp.concatenate([w, jnp.zeros((total - w.shape[0],), jnp.uint32)])
+    KERNEL_DISPATCHES["blockhash"] += 1
     out = _blockhash_j(w.reshape(rows_pad, chunk), interpret=_interpret())
     return np.asarray(out[:rows])
+
+
+def fold_digest(chunks: np.ndarray, n_words: int) -> str:
+    """Fold a (n, 2) per-chunk checksum table into the canonical hex digest
+    of a buffer of ``n_words`` uint32 words.  All-zero rows fold as the
+    identity (xor 0 / + 0), so a table over a zero-padded tiling folds to
+    the same digest as the unpadded buffer — what lets ``chunk_digests``
+    and the device-side digest batch many buffers into one kernel pass."""
+    chunks = np.asarray(chunks)
+    h1 = np.bitwise_xor.reduce(chunks[:, 0]) if len(chunks) else np.uint32(0)
+    h2 = np.uint32(np.sum(chunks[:, 1], dtype=np.uint64) & 0xFFFFFFFF) \
+        if len(chunks) else np.uint32(0)
+    return f"{int(h1):08x}{int(h2):08x}{int(n_words):08x}"
 
 
 def digest(buf: bytes | np.ndarray) -> str:
     """Hex digest of a byte buffer (chunk checksums folded host-side)."""
     words = bytes_to_u32(buf)
-    chunks = fletcher_chunks(words)
-    h1 = np.bitwise_xor.reduce(chunks[:, 0]) if len(chunks) else np.uint32(0)
-    h2 = np.uint32(np.sum(chunks[:, 1], dtype=np.uint64) & 0xFFFFFFFF)
-    return f"{int(h1):08x}{int(h2):08x}{len(words):08x}"
+    return fold_digest(fletcher_chunks(words), len(words))
+
+
+def chunk_digests(blobs) -> list[str]:
+    """``[digest(b) for b in blobs]`` in one checksum-kernel dispatch per
+    distinct row count instead of one per buffer.
+
+    Buffers are padded to whole 2048-word rows (zero rows fold as the
+    identity, see ``fold_digest``), stacked by equal row count, and checksummed
+    in a single grid walk per group — for a patch of N equal-size dirty
+    chunks that is 1 dispatch, not N.  Byte-identical output to per-buffer
+    ``digest``."""
+    blobs = list(blobs)
+    out: list = [None] * len(blobs)
+    words_of: list = [None] * len(blobs)
+    groups: dict[int, list[int]] = {}
+    for j, b in enumerate(blobs):
+        w = bytes_to_u32(b)
+        if w.shape[0] == 0:
+            out[j] = fold_digest(np.zeros((0, 2), np.uint32), 0)
+            continue
+        words_of[j] = w
+        groups.setdefault(-(-w.shape[0] // _ck.CHUNK_WORDS), []).append(j)
+    for rows, members in groups.items():
+        span = rows * _ck.CHUNK_WORDS
+        stacked = np.zeros(len(members) * span, np.uint32)
+        for slot, j in enumerate(members):
+            w = words_of[j]
+            stacked[slot * span:slot * span + w.shape[0]] = w
+        table = fletcher_chunks(stacked)
+        for slot, j in enumerate(members):
+            out[j] = fold_digest(table[slot * rows:(slot + 1) * rows],
+                                 words_of[j].shape[0])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# device-side dirty tracking (fused fingerprint-diff + gather, HBM-resident)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("total",))
+def _device_words_j(flat, total):
+    if flat.dtype.itemsize == 4:
+        w = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    else:
+        # little-endian byte stream of the flat array, then shift-combined
+        # into words — bit-identical to host bytes_to_u32 of the same bytes.
+        b = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+        pad = (-b.shape[0]) % 4
+        if pad:
+            b = jnp.concatenate([b, jnp.zeros((pad,), jnp.uint8)])
+        q = b.reshape(-1, 4).astype(jnp.uint32)
+        w = q[:, 0] | (q[:, 1] << 8) | (q[:, 2] << 16) | (q[:, 3] << 24)
+    if w.shape[0] < total:
+        w = jnp.concatenate([w, jnp.zeros((total - w.shape[0],), jnp.uint32)])
+    return w
+
+
+def device_words(x, chunk_bytes: int):
+    """Flatten a device array into the (rows, chunk_words) uint32 tiling the
+    fingerprint kernels consume — entirely in HBM, byte-identical to
+    ``bytes_to_u32`` of the host copy, zero-padded exactly like
+    ``block_fingerprints``.  Returns ``(words2d, n_words, rows)`` where
+    ``rows`` is the unpadded chunk count."""
+    assert chunk_bytes % 4 == 0 and chunk_bytes > 0, chunk_bytes
+    chunk = chunk_bytes // 4
+    flat = x.reshape(-1)
+    nbytes = int(flat.size) * flat.dtype.itemsize
+    n_words = -(-nbytes // 4)
+    rows = -(-n_words // chunk)
+    rows_pad = rows if rows <= _ck.BLOCK_ROWS \
+        else -(-rows // _ck.BLOCK_ROWS) * _ck.BLOCK_ROWS
+    w = _device_words_j(flat, rows_pad * chunk)
+    return w.reshape(rows_pad, chunk), n_words, rows
+
+
+def device_fingerprints(words2d) -> jax.Array:
+    """Block fingerprints of a device word tiling; the result STAYS on
+    device (same kernel/values as ``block_fingerprints``, no D2H)."""
+    KERNEL_DISPATCHES["blockhash"] += 1
+    return _blockhash_j(words2d, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _blockhash_diff_j(x, prev, interpret=True):
+    return _ck.blockhash_diff_pallas(x, prev, interpret=interpret)
+
+
+def fingerprint_diff(words2d, prev_fp):
+    """Fused fingerprint + dirty detection in one grid walk: returns
+    ``(new_fp (rows, 2), dirty (rows, 1))`` — both device-resident, neither
+    fingerprint input ever leaves HBM.  Only the chunk-sized dirty mask
+    (and whatever chunks it selects) needs to cross PCIe."""
+    KERNEL_DISPATCHES["blockhash"] += 1
+    return _blockhash_diff_j(words2d, prev_fp, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _gather_j(x, idx, interpret=True):
+    return _ck.gather_rows_pallas(x, idx, interpret=interpret)
+
+
+def gather_rows(words2d, idx):
+    """Device-side compaction: pack the selected chunk rows contiguously
+    (scalar-prefetch gather kernel), so the subsequent D2H copy moves
+    ``len(idx)`` chunks instead of the whole region."""
+    KERNEL_DISPATCHES["gather"] += 1
+    return _gather_j(words2d, jnp.asarray(idx, jnp.int32),
+                     interpret=_interpret())
 
 
 # ---------------------------------------------------------------------------

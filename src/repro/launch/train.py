@@ -47,6 +47,10 @@ def main(argv=None):
                     help="incremental checkpoints: ship only dirty chunks")
     ap.add_argument("--delta-chunk-kb", type=int, default=64)
     ap.add_argument("--delta-max-chain", type=int, default=8)
+    ap.add_argument("--device-delta", action="store_true",
+                    help="fingerprint-diff in HBM and gather only dirty "
+                         "chunks over PCIe (implies --delta semantics; "
+                         "requires --delta)")
     ap.add_argument("--interval-s", type=float, default=None)
     ap.add_argument("--phase-predictor", default="ema",
                     choices=["none", "ema", "gru"])
@@ -75,6 +79,7 @@ def main(argv=None):
         mode="sync" if args.mode == "sync" else "async",
         modules=modules,
         phase_predictor=args.phase_predictor,
+        device_delta=args.device_delta,
     )
     client = None
     if args.mode != "off":
