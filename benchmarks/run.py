@@ -43,6 +43,11 @@ scale with the scaling factor stated in the ``derived`` column.
                   single-consumer baseline, per-request p50/p95/p99 tail
                   latency, and the exactly-once external blob-get
                   guarantee (counter-asserted).
+  bench_multitenant  multi-tenant contention: 1/2/4/8 writer tenants plus
+                  a reader tenant on ONE shared Cluster + ActiveBackend —
+                  per-tenant p50/p95/p99, aggregate throughput, write
+                  amplification, with the lane-fairness SLO (p99 spread
+                  across equal-weight tenants) asserted in-bench.
   bench_scale     modeled weak-scaling of the L3 flush under shared-PFS
                   bandwidth (flush contention), from the storage model.
   bench_lock_overhead  runtime concurrency checker cost: tracked-lock
@@ -67,6 +72,9 @@ import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from stats import LatencyRecorder  # noqa: E402
 
 ROWS = []
 
@@ -636,21 +644,17 @@ def bench_restore_serving():
         dt = time.perf_counter() - t0
         return regions, dt
 
-    def pcts(lats):
-        p50, p95, p99 = np.percentile(np.asarray(lats) * 1e3, (50, 95, 99))
-        return f"p50={p50:.1f}ms,p95={p95:.1f}ms,p99={p99:.1f}ms"
-
     # --- serial baseline: one cold single-reader restore per request ---
-    lats = []
+    lats = LatencyRecorder("serial")
     t0 = time.perf_counter()
     for _ in range(reqs):
         regions, dt = serve_one(fresh_cluster(readers=1))
-        lats.append(dt)
+        lats.record(dt)
     serial_wall = time.perf_counter() - t0
     check(regions)
     base_tput = reqs / serial_wall
-    row(f"serving_serial_{reqs}req", np.mean(lats) * 1e6,
-        f"{pcts(lats)},wall={serial_wall * 1e3:.0f}ms,"
+    row(f"serving_serial_{reqs}req", lats.mean_us,
+        f"{lats.summary()},wall={serial_wall * 1e3:.0f}ms,"
         f"throughput={base_tput:.1f}req_s")
 
     # --- serving sweep: N concurrent readers, one shared cluster,
@@ -658,7 +662,7 @@ def bench_restore_serving():
     for nr in (2, 4, 8):
         cluster = fresh_cluster()
         counting = cluster.external_tiers
-        lats = [0.0] * reqs
+        lats = LatencyRecorder(f"concurrent_{nr}r")
         sample = [None] * nr
         errs = []
         barrier = threading.Barrier(nr)
@@ -667,7 +671,8 @@ def bench_restore_serving():
             try:
                 barrier.wait()
                 for j in range(i, reqs, nr):
-                    sample[i], lats[j] = serve_one(cluster, plan)
+                    sample[i], dt = serve_one(cluster, plan)
+                    lats.record(dt)
             except Exception as e:
                 errs.append(e)
 
@@ -698,9 +703,150 @@ def bench_restore_serving():
             extra = f",blob_gets=once({len(blob_gets)}),keys_calls=0"
             assert tput / base_tput >= 2.0, (
                 f"serving throughput {tput / base_tput:.2f}x < 2x baseline")
-        row(f"serving_concurrent_{nr}r_{reqs}req", np.mean(lats) * 1e6,
-            f"{pcts(lats)},wall={wall * 1e3:.0f}ms,"
+        row(f"serving_concurrent_{nr}r_{reqs}req", lats.mean_us,
+            f"{lats.summary()},wall={wall * 1e3:.0f}ms,"
             f"throughput={tput / base_tput:.2f}x{extra}")
+
+
+def bench_multitenant():
+    """Multi-tenant contention: W writer tenants (each its own stream /
+    ``VelocClient``) plus one reader tenant share ONE ``Cluster`` and ONE
+    ``ActiveBackend``, sweeping W over 1/2/4/8.  Every writer runs a
+    closed loop of checkpoints (await full completion before the next),
+    so per-op latency includes lane queueing behind the other tenants;
+    the reader concurrently re-restores a pre-sealed model stream.
+    Reports per-tenant p50/p95/p99, aggregate throughput, and write
+    amplification (tier bytes put / logical payload bytes), and asserts
+    the fairness SLO in-bench: with equal lane weights, no tenant's p99
+    may exceed the best tenant's by more than ``FAIR_SPREAD``x, and every
+    lane must have dispatched its full run (no starvation).
+
+    The external tier carries a modeled object-store ``RTT`` per put/get
+    — the resource the lanes arbitrate — so the benchmark times fairness
+    under genuine backend contention, not local-disk noise."""
+    import threading
+
+    from repro.core import Cluster, VelocClient, VelocConfig
+    from repro.core import restart as rst
+
+    n = (256 << 10) // 4   # 256 KiB of f32 payload per checkpoint
+    ckpts = 6              # closed-loop checkpoints per writer tenant
+    RTT = 0.004            # modeled external-tier round trip
+    FAIR_SPREAD = 4.0      # in-bench fairness bound on p99 max/min
+    payload = np.arange(n, dtype=np.float32)
+
+    class ModeledTier:
+        """Byte accounting on put (write amplification) plus the modeled
+        remote-store RTT on external I/O."""
+
+        def __init__(self, inner, rtt=0.0):
+            self.inner = inner
+            self.rtt = rtt
+            self.put_bytes = 0
+            self._mu = threading.Lock()
+
+        def __getattr__(self, attr):
+            return getattr(self.inner, attr)
+
+        def put(self, key, data):
+            with self._mu:
+                self.put_bytes += len(data)
+            if self.rtt:
+                time.sleep(self.rtt)
+            return self.inner.put(key, data)
+
+        def get(self, key):
+            if self.rtt:
+                time.sleep(self.rtt)
+            return self.inner.get(key)
+
+    def tenant_cfg(name):
+        return VelocConfig(name=name, scratch=root, mode="async",
+                           backend_workers=4, partner=False, xor_group=0,
+                           keep_versions=0, flush=True)
+
+    for W in (1, 2, 4, 8):
+        root = f"/tmp/veloc_bench_mt_{W}"
+        shutil.rmtree(root, ignore_errors=True)
+        cfgs = [tenant_cfg(f"tenant{i}") for i in range(W)]
+        cluster = Cluster(cfgs[0], nranks=1)
+        # seed the reader tenant's stream before metering starts
+        model_cfg = VelocConfig(name="model", scratch=root, mode="sync",
+                                partner=False, xor_group=0, keep_versions=0,
+                                flush=True)
+        seeder = VelocClient(model_cfg, cluster)
+        seeder.checkpoint({"w": payload}, version=1, device_snapshot=False)
+        metered = [ModeledTier(t, rtt=RTT) for t in cluster.external_tiers]
+        cluster.external_tiers = metered
+        local = [ModeledTier(t) for t in cluster._node_tiers[0]]
+        cluster._node_tiers[0] = local
+
+        writers = [VelocClient(cfgs[0], cluster)]
+        writers += [VelocClient(c, cluster, backend=writers[0].backend)
+                    for c in cfgs[1:]]
+        recs = [LatencyRecorder(f"tenant{i}") for i in range(W)]
+        rrec = LatencyRecorder("reader")
+        errs = []
+        barrier = threading.Barrier(W + 1)
+
+        def write_loop(i):
+            try:
+                barrier.wait()
+                for v in range(1, ckpts + 1):
+                    with recs[i].timed():
+                        fut = writers[i].checkpoint(
+                            {"w": payload}, version=v,
+                            device_snapshot=False)
+                        assert fut.result(timeout=60)
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        def read_loop():
+            try:
+                plan = rst.plan_restore(cluster, "model")
+                barrier.wait()
+                for _ in range(ckpts):
+                    with rrec.timed():
+                        regs = rst.load_rank_regions(
+                            cluster, "model", 1, 0, plan=plan)
+                    assert regs["w"].view(np.float32)[-1] == payload[-1]
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=write_loop, args=(i,))
+                   for i in range(W)]
+        threads.append(threading.Thread(target=read_loop))
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        assert not errs, errs
+
+        lanes = writers[0].backend.status()["lanes"]
+        for i in range(W):
+            assert lanes[f"tenant{i}"]["dispatched"] >= ckpts, \
+                f"tenant{i} starved: {lanes[f'tenant{i}']}"
+        p99s = [r.p99_ms() for r in recs]
+        spread = max(p99s) / max(min(p99s), 1e-9)
+        assert spread <= FAIR_SPREAD, (
+            f"unfair lanes at {W} tenants: p99 spread {spread:.2f}x "
+            f"> {FAIR_SPREAD}x ({[f'{p:.1f}ms' for p in p99s]})")
+
+        logical = W * ckpts * payload.nbytes
+        tier_bytes = sum(t.put_bytes for t in metered + local)
+        amp = tier_bytes / logical
+        tput = (W * ckpts) / wall
+        for i, r in enumerate(recs):
+            row(f"multitenant_{W}w_tenant{i}", r.mean_us, r.summary())
+        row(f"multitenant_{W}w_reader", rrec.mean_us, rrec.summary())
+        row(f"multitenant_{W}w_aggregate", np.mean(
+            [r.mean_us for r in recs]),
+            f"throughput={tput:.1f}ck_s,write_amp={amp:.2f}x,"
+            f"p99_spread={spread:.2f}x,wall={wall * 1e3:.0f}ms")
+        for w in writers:
+            w.shutdown()
 
 
 def bench_scale():
@@ -820,8 +966,8 @@ def bench_lock_overhead():
 ALL_BENCHES = (bench_levels, bench_engine, bench_erasure, bench_capture,
                bench_async, bench_delta, bench_device_delta,
                bench_aggregation, bench_packing,
-               bench_restart, bench_restore_serving, bench_interval,
-               bench_scale,
+               bench_restart, bench_restore_serving, bench_multitenant,
+               bench_interval, bench_scale,
                bench_lock_overhead)
 
 

@@ -1,0 +1,60 @@
+"""Shared latency accounting for the benchmark harness.
+
+Every serving/SLO-style benchmark needs the same three things: collect
+per-request wall times from concurrent workers, summarize them as tail
+percentiles (p50/p95/p99 — the numbers an SLO is written against, where
+a bare mean hides the stragglers), and print them in one consistent
+format so the BENCH_*.json trajectory artifacts stay comparable across
+benchmarks and across runs.  ``LatencyRecorder`` is that helper.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+
+class LatencyRecorder:
+    """Collects request latencies (seconds) and summarizes their tail.
+
+    ``record()`` appends a measured duration; ``timed()`` is a context
+    manager that measures and records one; list-append is atomic under
+    the GIL so concurrent workers may share one recorder.
+    """
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.samples: list[float] = []
+
+    # ---- collection ---------------------------------------------------
+    def record(self, seconds: float):
+        self.samples.append(float(seconds))
+
+    @contextmanager
+    def timed(self):
+        t0 = time.perf_counter()
+        yield
+        self.samples.append(time.perf_counter() - t0)
+
+    # ---- summary ------------------------------------------------------
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    @property
+    def mean_us(self) -> float:
+        return float(np.mean(self.samples)) * 1e6
+
+    def percentiles_ms(self, pcts=(50, 95, 99)) -> tuple[float, ...]:
+        vals = np.percentile(np.asarray(self.samples) * 1e3, pcts)
+        return tuple(float(v) for v in vals)
+
+    def p99_ms(self) -> float:
+        return self.percentiles_ms((99,))[0]
+
+    def summary(self) -> str:
+        """The harness's canonical tail-latency string:
+        ``p50=..ms,p95=..ms,p99=..ms``."""
+        p50, p95, p99 = self.percentiles_ms()
+        return f"p50={p50:.1f}ms,p95={p95:.1f}ms,p99={p99:.1f}ms"

@@ -1,5 +1,7 @@
 """VELOC core: very low overhead multi-level asynchronous checkpointing."""
 from repro.core.api import Cluster, VelocClient, VelocConfig, make_client  # noqa: F401
+from repro.core.backend import (ActiveBackend, AdmissionError,  # noqa: F401
+                                LanePolicy, RateLimiter)
 from repro.core.datastates import DataStates, Snapshot  # noqa: F401
 from repro.core.future import CheckpointError, CheckpointFuture  # noqa: F401
 from repro.core.pipeline import (MODULES, ModuleRegistry, ModuleSpec,  # noqa: F401

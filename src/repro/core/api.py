@@ -95,7 +95,22 @@ class VelocConfig:
     backend_workers: int = 2
     phase_predictor: str = "none"       # none | ema | gru
     use_kv_external: bool = False       # add the DAOS-style KV tier
-    keep_versions: int = 3              # GC horizon
+    keep_versions: int = 3              # GC horizon (0 = no count limit)
+    max_age_s: Optional[float] = None   # age-based retention: versions older
+    #                                     than this are retired by GC (the
+    #                                     newest always survives; a kept
+    #                                     delta pins its chain regardless)
+    lane_weight: float = 1.0            # deficit-RR share vs other streams
+    #                                     on a shared backend
+    lane_rate_bps: Optional[float] = None    # private flush budget (bytes/s)
+    lane_rate_share: Optional[float] = None  # ... or fraction of the global
+    #                                          rate_limit_bps (exclusive)
+    admit_max_queued: Optional[int] = None   # admission high-water mark:
+    #                                          queued+running tasks on this
+    #                                          stream's lane before new
+    #                                          checkpoints resolve skipped
+    admit_max_queued_bytes: Optional[int] = None  # ... or queued payload
+    #                                               bytes (None = unlimited)
     restore_readers: int = 4            # bounded fetch pool width for the
     #                                     concurrent restore serving path
     #                                     (<=1 = serial chain walk)
@@ -141,6 +156,12 @@ class VelocConfig:
                             backend_workers=self.backend_workers,
                             phase_predictor=self.phase_predictor,
                             keep_versions=self.keep_versions,
+                            max_age_s=self.max_age_s,
+                            lane_weight=self.lane_weight,
+                            lane_rate_bps=self.lane_rate_bps,
+                            lane_rate_share=self.lane_rate_share,
+                            admit_max_queued=self.admit_max_queued,
+                            admit_max_queued_bytes=self.admit_max_queued_bytes,
                             aggregate=self.aggregate,
                             seal_retries=self.seal_retries,
                             seal_backoff_base_s=self.seal_backoff_base_s,
@@ -227,6 +248,11 @@ class Cluster:
         # registry[(name, version, level)] = {rank: digest}
         self._registry: dict[tuple, dict[int, str]] = {}
         self._meta: dict[tuple, dict] = {}
+        #: (name, version) -> wall-clock creation time, noted on first
+        #: shard commit/stage.  Age-based retention (``gc(max_age_s=...)``)
+        #: reads this; the durable catalog carries the same stamp so a
+        #: FRESH process can age out a previous run's versions too.
+        self._vtimes: dict[tuple, float] = {}
         # (name, version) -> parent version of a delta shard (None = full);
         # GC refcounts through these links so a base is never dropped while
         # a live delta chain still references it.
@@ -551,7 +577,8 @@ class Cluster:
             rec = st["versions"][version] = {
                 "kind": "full", "parent": None, "sealed": False,
                 "location": "direct", "pack": None, "entries": None,
-                "levels": [], "stamp": self._run_stamp}
+                "levels": [], "stamp": self._run_stamp,
+                "ts": self._vtimes.get((name, version)) or time.time()}
         if compacted:
             rec["kind"], rec["parent"] = "full", None
         else:
@@ -1374,6 +1401,7 @@ class Cluster:
             k = (name, version, level)
             reg = self._registry.setdefault(k, {})
             reg[rank] = digest
+            self._vtimes.setdefault((name, version), time.time())
             if meta:
                 self._note_meta_locked(name, version, meta)
             if len(reg) == self.nranks:
@@ -1611,10 +1639,21 @@ class Cluster:
         for tier in self._node_tiers[rank]:
             tier.wipe()
 
-    def gc(self, name: str, keep: int):
-        """Drop every artifact of versions beyond the ``keep`` newest:
+    def gc(self, name: str, keep: int, *, max_age_s: Optional[float] = None,
+           now: Optional[float] = None):
+        """Drop every artifact of versions beyond the retention policy:
         shards, partner copies, parity blobs and per-level manifests, on
         node-local AND external tiers (prefix delete per version).
+
+        Retention is per-stream and two-dimensional: ``keep`` bounds the
+        count (the newest ``keep`` survive; 0 = no count limit), and
+        ``max_age_s`` bounds age — a version whose creation time (noted at
+        first shard commit, carried durably in the catalog record's
+        ``ts``) is older than this many seconds is retired even inside the
+        count window.  The newest version always survives whatever its
+        age, versions with no known timestamp are never age-retired
+        (conservative), and the delta-chain refcount below still pins a
+        survivor's whole chain.  ``now`` overrides the wall clock (tests).
 
         Restart-safe: enumeration is the UNION of the in-memory registry
         and the durable stream catalog (falling back to a manifest key
@@ -1690,7 +1729,17 @@ class Cluster:
                                if n == name}
                               | set(cat_versions) | set(scan_levels),
                               reverse=True)
-            live = set(versions[:keep])
+            live = set(versions[:keep]) if keep else set(versions)
+            if max_age_s is not None and versions:
+                cutoff = (now if now is not None else time.time()) - max_age_s
+                for v in list(live):
+                    if v == versions[0]:
+                        continue  # the newest survives whatever its age
+                    ts = self._vtimes.get((name, v))
+                    if ts is None:
+                        ts = (cat_versions.get(v) or {}).get("ts")
+                    if ts is not None and ts < cutoff:
+                        live.discard(v)
             frontier = list(live)
             while frontier:
                 p = parents.get(frontier.pop())
@@ -1752,6 +1801,7 @@ class Cluster:
                 for k in [k for k in self._registry if k[0] == name and k[1] == v]:
                     self._registry.pop(k, None)
                 self._meta.pop((name, v), None)
+                self._vtimes.pop((name, v), None)
                 self._parents.pop((name, v), None)
                 self._compacted.pop((name, v), None)
                 self._batches.pop((name, v), None)
@@ -1866,11 +1916,24 @@ class VelocClient:
     (compiled through the shim).  When no ``cluster`` is given, a 1-rank
     cluster is built — from the config's topology in legacy mode, or from
     the default ``TierTopology`` rooted at ``scratch`` in v2 mode.
+
+    Multi-tenant: several clients (different stream names, or the ranks of
+    one stream) may share one ``Cluster`` *and* one ``ActiveBackend`` —
+    pass ``backend=other_client.backend`` (or a backend you constructed).
+    Each client registers its stream's lane policy (weight, rate budget,
+    admission marks — the ``lane_*`` / ``admit_*`` spec knobs) on the
+    shared backend at construction; workers then serve the streams by
+    deficit-weighted round-robin instead of one global queue.  A client
+    that was *given* its backend does not own it: ``shutdown()`` drains
+    this client's own tasks and leaves the backend running for the other
+    tenants — the owner (the client that created it, or whoever built it
+    standalone) shuts it down last.
     """
 
     def __init__(self, cfg: Union[PipelineSpec, VelocConfig],
                  cluster: Optional[Cluster] = None, rank: int = 0, mesh=None,
-                 *, scratch: str = "/tmp/veloc"):
+                 *, scratch: str = "/tmp/veloc",
+                 backend: Optional[ActiveBackend] = None):
         if isinstance(cfg, VelocConfig):
             self.cfg: Optional[VelocConfig] = cfg
             self.spec = cfg.to_pipeline_spec()
@@ -1915,12 +1978,28 @@ class VelocClient:
         if self.predictor is not None:
             self.cluster.phase_gate = self.predictor.idle_wait
         self.backend = None
+        self._owns_backend = False
         if spec.mode == "async":
-            self.backend = ActiveBackend(
-                workers=spec.backend_workers,
-                rate_limiter=self.cluster.rate_limiter,
-                phase_gate=self.cluster.phase_gate,
-                maintenance_interval_s=spec.maintenance_interval_s)
+            if backend is not None:
+                self.backend = backend
+            else:
+                self.backend = ActiveBackend(
+                    workers=spec.backend_workers,
+                    rate_limiter=self.cluster.rate_limiter,
+                    phase_gate=self.cluster.phase_gate,
+                    maintenance_interval_s=spec.maintenance_interval_s)
+                self._owns_backend = True
+            spec.validate_tenant_knobs()
+            self.backend.configure_stream(
+                self.name, weight=spec.lane_weight,
+                rate_bps=spec.lane_rate_bps,
+                rate_share=spec.lane_rate_share,
+                max_queued=spec.admit_max_queued,
+                max_queued_bytes=spec.admit_max_queued_bytes)
+        elif backend is not None:
+            raise ValueError(
+                "backend= is only meaningful with mode='async' (sync mode "
+                "runs the whole pipeline inline)")
         self._compact_lock = concurrency.TrackedLock(
             "client._compact_lock", concurrency.RANK_CLIENT)
         self._compact_pending = False
@@ -2015,7 +2094,7 @@ class VelocClient:
         # through the scan fallback (both run on the maintenance lane in
         # submission order)
         self._schedule_catalog_sync(version)
-        if self.spec.keep_versions:
+        if self.spec.keep_versions or self.spec.max_age_s is not None:
             self._schedule_gc(version)
         if not ctx.skipped and self.spec.compact_threshold:
             self._maybe_compact(version)
@@ -2044,13 +2123,17 @@ class VelocClient:
         maintenance task (at most one pending instance however many
         checkpoints queued it); sync mode keeps the historical inline
         behaviour."""
-        keep = self.spec.keep_versions + 1
+        # keep=0 means "no count limit" (age-only retention); otherwise
+        # keep the newest N plus the version just submitted.
+        keep = self.spec.keep_versions + 1 if self.spec.keep_versions else 0
+        age = self.spec.max_age_s
         if self.backend is not None:
             self.backend.submit_maintenance(
                 f"gc:{self.name}:{self.rank}", version,
-                lambda: self.cluster.gc(self.name, keep), coalesce=True)
+                lambda: self.cluster.gc(self.name, keep, max_age_s=age),
+                coalesce=True)
         else:
-            self.cluster.gc(self.name, keep)
+            self.cluster.gc(self.name, keep, max_age_s=age)
 
     def _schedule_catalog_sync(self, version: int):
         """Persist pending durable-catalog updates for this stream.  Like
@@ -2294,7 +2377,17 @@ class VelocClient:
 
     def shutdown(self):
         if self.backend is not None:
-            self.backend.shutdown()
+            if self._owns_backend:
+                self.backend.shutdown()
+            else:
+                # shared backend: drain THIS stream's pipeline and
+                # maintenance tasks, then leave the backend running for
+                # the other tenants (its owner shuts it down).
+                for kind in (f"pipe:{self.name}:{self.rank}",
+                             f"gc:{self.name}:{self.rank}",
+                             f"catalog:{self.name}:{self.rank}",
+                             f"compact:{self.name}:{self.rank}"):
+                    self.backend.wait(kind, timeout=60)
         try:
             # delta versions waiting in an open rolling pack are L1/L2-only;
             # seal them now so a later fresh process can restore them at L3

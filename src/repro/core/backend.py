@@ -2,11 +2,22 @@
 interference mitigation (paper §2, "Optimized Asynchronous Multi-Level
 Strategies").
 
-  - worker threads draining a priority queue (lower priority value first —
-    module pipeline order; FIFO within a priority);
+  - worker threads draining **per-stream lanes**: every checkpoint stream
+    (tenant) owns a priority queue of its own, and workers pick the next
+    task by deficit-weighted round-robin across lanes — one tenant's
+    backlog can no longer head-of-line-block every other tenant the way a
+    single global heap did (lower priority value first and FIFO within a
+    priority still hold *within* a lane);
   - a token-bucket RateLimiter bounding background bytes/sec so flushes do
     not compete with the application for host bandwidth (the TPU analogue of
-    "run background operations at lower OS priority");
+    "run background operations at lower OS priority") — plus optional
+    per-stream limiters carved from that global budget
+    (``configure_stream(rate_bps=...)`` / ``rate_share=...``);
+  - admission control: a lane past its high-water mark (queued+running
+    tasks, or queued bytes) refuses new submissions with
+    ``AdmissionError`` instead of queueing unboundedly — the engine turns
+    that into a *skipped* checkpoint with a diagnostic, so a tenant whose
+    external tier wedged degrades alone instead of wedging everyone;
   - an optional *phase gate*: a StepPhasePredictor callback that delays
     chunk transfers into predicted idle windows (the paper's
     sequence-model-based scheduling, §2 / ref [6]);
@@ -20,6 +31,11 @@ Strategies").
     start per ``maintenance_interval_s``.  Delta-chain compaction and
     parity refresh run here so restart latency stays bounded without the
     application (or its checkpoints) ever waiting on them.
+
+All lane state (heaps, credits, counters) is guarded by the backend's
+single condition ``backend._cv`` (rank ``RANK_BACKEND``); per-stream
+rate-limiter buckets use their own ``RANK_GUARD`` locks and are never
+acquired while ``_cv`` is held.
 """
 from __future__ import annotations
 
@@ -32,19 +48,25 @@ from typing import Callable, Optional, Union
 
 from repro.core import concurrency
 
+#: lane name used when ``submit`` is called without an explicit stream —
+#: legacy single-tenant callers all share one lane, which reproduces the
+#: historical single-queue behaviour exactly.
+DEFAULT_STREAM = "_default"
+
 
 class RateLimiter:
     """Token bucket in bytes/sec.  acquire() blocks until budget allows."""
 
     def __init__(self, bytes_per_sec: Optional[float] = None, burst: float = 2.0,
-                 clock=time.monotonic, sleep=time.sleep):
+                 clock=time.monotonic, sleep=time.sleep,
+                 name: str = "backend.rate_limiter"):
         self.rate = bytes_per_sec
         self.burst = burst
         self._tokens = (bytes_per_sec or 0) * burst
         self._last = clock()
         self._clock, self._sleep = clock, sleep
         self._lock = concurrency.TrackedLock(
-            "backend.rate_limiter._lock", concurrency.RANK_GUARD)
+            f"{name}._lock", concurrency.RANK_GUARD)
 
     def acquire(self, nbytes: int):
         if self.rate is None:
@@ -148,7 +170,6 @@ class ReaderPool:
             self._cv.notify_all()
         for t in self._threads:
             t.join(timeout=5)
-        self._threads = []
 
 
 @dataclass(order=True)
@@ -163,21 +184,93 @@ class _Task:
     #: maintenance lane only: don't start before this monotonic time
     #: (seal-retry exponential backoff); None = eligible immediately
     not_before: Optional[float] = field(compare=False, default=None)
+    #: checkpoint lane this task was enqueued on
+    stream: str = field(compare=False, default=DEFAULT_STREAM)
+    #: caller-declared payload size (admission accounting only)
+    nbytes: int = field(compare=False, default=0)
+    #: monotonic enqueue time (lane wait-time accounting)
+    enq_t: float = field(compare=False, default=0.0)
+
+
+@dataclass
+class LanePolicy:
+    """Per-stream scheduling / admission knobs (see ``configure_stream``).
+
+    ``weight``: deficit-round-robin share relative to other lanes (2.0 =
+    served twice as often when everyone has work).  ``rate_bps`` /
+    ``rate_share``: a private token-bucket budget for this stream's flush
+    bytes — explicit bytes/sec, or a fraction carved from the backend's
+    global limiter (a share of an unlimited budget stays unlimited).
+    ``max_queued`` / ``max_queued_bytes``: admission high-water marks on
+    queued+running tasks and queued payload bytes; ``None`` = unlimited."""
+    weight: float = 1.0
+    rate_bps: Optional[float] = None
+    rate_share: Optional[float] = None
+    max_queued: Optional[int] = None
+    max_queued_bytes: Optional[int] = None
+
+
+class _Lane:
+    """One stream's checkpoint queue + scheduling/admission state.
+    Mutated only under ``ActiveBackend._cv``."""
+
+    def __init__(self, name: str, policy: LanePolicy):
+        self.name = name
+        self.policy = policy
+        self.heap: list[_Task] = []
+        self.credit = 1.0  # deficit counter: >= 1.0 may dispatch one task
+        self.queued_bytes = 0
+        self.running = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.dispatched = 0
+        self.wait_total_s = 0.0
+        self.wait_max_s = 0.0
+        self.limiter: Optional[RateLimiter] = None
+
+    def stats(self) -> dict:
+        return {"queued": len(self.heap),
+                "queued_bytes": self.queued_bytes,
+                "running": self.running,
+                "admitted": self.admitted,
+                "rejected": self.rejected,
+                "dispatched": self.dispatched,
+                "wait_max_s": self.wait_max_s,
+                "wait_total_s": self.wait_total_s,
+                "weight": self.policy.weight,
+                "rate_bps": None if self.limiter is None
+                else self.limiter.rate}
 
 
 class TaskError(Exception):
     pass
 
 
+class AdmissionError(RuntimeError):
+    """A lane is past its high-water mark; the submission was refused.
+
+    Carries the stream name and a snapshot of the lane counters so the
+    caller (the engine) can resolve the checkpoint as *skipped* with a
+    useful diagnostic instead of blocking or failing opaquely."""
+
+    def __init__(self, stream: str, detail: str):
+        super().__init__(f"stream '{stream}' over admission high-water mark: "
+                         f"{detail}")
+        self.stream = stream
+        self.detail = detail
+
+
 class ActiveBackend:
-    """Priority-queue worker pool for background checkpoint pipeline stages."""
+    """Multi-lane worker pool for background checkpoint pipeline stages."""
 
     def __init__(self, workers: int = 1, rate_limiter: Optional[RateLimiter] = None,
                  phase_gate: Optional[Callable[[], float]] = None,
                  maintenance_interval_s: float = 0.0):
         self.rate_limiter = rate_limiter or RateLimiter(None)
         self.phase_gate = phase_gate  # returns seconds to wait before heavy IO
-        self._heap: list[_Task] = []
+        self._lanes: dict[str, _Lane] = {}
+        self._rr: list[str] = []  # lane service order (round-robin cursor)
+        self._rr_idx = 0
         self._maint: list[_Task] = []  # maintenance lane (idle-only)
         self._maint_interval = maintenance_interval_s
         self._maint_last: Optional[float] = None  # last maintenance start
@@ -201,33 +294,121 @@ class ActiveBackend:
             t.start()
 
     # ------------------------------------------------------------------
+    # lanes
+    def configure_stream(self, stream: str, *, weight: float = 1.0,
+                         rate_bps: Optional[float] = None,
+                         rate_share: Optional[float] = None,
+                         max_queued: Optional[int] = None,
+                         max_queued_bytes: Optional[int] = None) -> None:
+        """Create or reconfigure the lane for ``stream``.  Idempotent;
+        clients call this at construction so tenants sharing one backend
+        each get their declared weight / budget / admission policy.
+        Unconfigured streams get an implicit default lane (weight 1.0,
+        no private budget, no admission limit) on first submit."""
+        if weight <= 0:
+            raise ValueError(f"lane weight must be > 0, got {weight}")
+        if rate_bps is not None and rate_share is not None:
+            raise ValueError("set rate_bps or rate_share, not both")
+        if rate_share is not None and not 0 < rate_share <= 1:
+            raise ValueError(f"rate_share must be in (0, 1], got {rate_share}")
+        pol = LanePolicy(weight=weight, rate_bps=rate_bps,
+                         rate_share=rate_share, max_queued=max_queued,
+                         max_queued_bytes=max_queued_bytes)
+        bps = rate_bps
+        if bps is None and rate_share is not None \
+                and self.rate_limiter.rate is not None:
+            bps = self.rate_limiter.rate * rate_share
+        limiter = RateLimiter(bps, name=f"backend.lane.{stream}") \
+            if bps is not None else None
+        with self._cv:
+            lane = self._lane_locked(stream)
+            lane.policy = pol
+            lane.limiter = limiter
+
+    def _lane_locked(self, stream: str) -> _Lane:
+        lane = self._lanes.get(stream)
+        if lane is None:
+            lane = _Lane(stream, LanePolicy())
+            self._lanes[stream] = lane
+            self._rr.append(stream)
+        return lane
+
+    def lane_limiter(self, stream: str) -> Optional[RateLimiter]:
+        """The stream's private token bucket, if one was configured.
+        Callers charge this *in addition to* the global ``rate_limiter``
+        (per-tenant budget carved from the shared budget)."""
+        with self._cv:
+            lane = self._lanes.get(stream)
+            return lane.limiter if lane is not None else None
+
+    def _queued_ckpt_locked(self) -> bool:
+        return any(lane.heap for lane in self._lanes.values())
+
+    def _all_queued_locked(self) -> list[_Task]:
+        out: list[_Task] = []
+        for lane in self._lanes.values():
+            out.extend(lane.heap)
+        out.extend(self._maint)
+        return out
+
+    # ------------------------------------------------------------------
     def submit(self, kind: str, version: int, fn: Callable, *, priority: int = 50,
                deadline_s: Optional[float] = None, supersede: bool = False,
-               on_drop: Optional[Callable] = None):
+               on_drop: Optional[Callable] = None,
+               stream: Optional[str] = None, nbytes: int = 0):
         """supersede=True drops queued (not running) older versions of kind.
         ``on_drop`` fires if THIS task is later dropped by a superseding
-        submit (so completion handles don't hang on preempted versions)."""
+        submit (so completion handles don't hang on preempted versions).
+
+        ``stream`` names the lane (tenant) the task belongs to; omitted,
+        everything shares one default lane.  ``nbytes`` is the caller's
+        payload-size estimate, counted against the lane's
+        ``max_queued_bytes`` high-water mark.  Raises ``AdmissionError``
+        (after supersede has freed what it can) when the lane is over its
+        configured high-water mark."""
+        lane_name = stream or DEFAULT_STREAM
         dropped = []
         with self._cv:
             if self._stop:
                 raise RuntimeError("backend stopped")
+            lane = self._lane_locked(lane_name)
             if supersede:
-                before = len(self._heap)
+                before = len(lane.heap)
                 kept = []
-                for t in self._heap:
+                for t in lane.heap:
                     if t.kind == kind and t.version < version:
                         self._done[(t.kind, t.version)] = "superseded"
+                        lane.queued_bytes -= t.nbytes
                         if t.on_drop is not None:
                             dropped.append(t.on_drop)
                     else:
                         kept.append(t)
                 if len(kept) != before:
-                    self._heap = kept
-                    heapq.heapify(self._heap)
+                    lane.heap = kept
+                    heapq.heapify(lane.heap)
+            pol = lane.policy
+            depth = len(lane.heap) + lane.running
+            if pol.max_queued is not None and depth >= pol.max_queued:
+                lane.rejected += 1
+                detail = (f"{depth} queued+running >= max_queued="
+                          f"{pol.max_queued}")
+                self._cv.notify_all()
+                raise AdmissionError(lane_name, detail)
+            if pol.max_queued_bytes is not None and lane.heap and \
+                    lane.queued_bytes + nbytes > pol.max_queued_bytes:
+                lane.rejected += 1
+                detail = (f"{lane.queued_bytes}+{nbytes} queued bytes > "
+                          f"max_queued_bytes={pol.max_queued_bytes}")
+                self._cv.notify_all()
+                raise AdmissionError(lane_name, detail)
             self._seq += 1
             dl = time.monotonic() + deadline_s if deadline_s else None
-            heapq.heappush(self._heap, _Task(priority, self._seq, version, kind,
-                                             fn, dl, on_drop))
+            heapq.heappush(lane.heap,
+                           _Task(priority, self._seq, version, kind, fn, dl,
+                                 on_drop, stream=lane_name, nbytes=nbytes,
+                                 enq_t=time.monotonic()))
+            lane.queued_bytes += nbytes
+            lane.admitted += 1
             self._latest[kind] = max(self._latest.get(kind, -1), version)
             self._cv.notify()
         for cb in dropped:  # outside the lock: callbacks may block/log
@@ -273,8 +454,47 @@ class ActiveBackend:
             self._latest[kind] = max(self._latest.get(kind, -1), version)
             self._cv.notify()
 
+    def _pop_ckpt_locked(self) -> Optional[_Task]:
+        """Deficit-weighted round-robin across non-empty lanes: a lane
+        accrues ``weight`` credit each time the scheduler passes it with
+        work queued and spends 1.0 credit per dispatched task, so over time
+        lanes are served proportionally to their weights and no lane
+        starves.  With all weights at the default 1.0 this degenerates to
+        strict round-robin."""
+        if not self._queued_ckpt_locked():
+            return None
+        n = len(self._rr)
+        # Two rotations: every non-empty lane accrues its weight at least
+        # once, so any lane with weight >= 0.5 reaches a full credit.
+        for _ in range(2):
+            for off in range(n):
+                i = (self._rr_idx + off) % n
+                lane = self._lanes[self._rr[i]]
+                if not lane.heap:
+                    continue
+                if lane.credit >= 1.0:
+                    lane.credit -= 1.0
+                    self._rr_idx = (i + 1) % n
+                    return self._lane_pop_locked(lane)
+                lane.credit += lane.policy.weight
+        # All weights tiny: serve the largest accrued credit outright.
+        lane = max((ln for ln in self._lanes.values() if ln.heap),
+                   key=lambda ln: ln.credit)
+        lane.credit = 0.0
+        return self._lane_pop_locked(lane)
+
+    def _lane_pop_locked(self, lane: _Lane) -> _Task:
+        task = heapq.heappop(lane.heap)
+        lane.queued_bytes -= task.nbytes
+        wait = max(0.0, time.monotonic() - task.enq_t)
+        lane.wait_total_s += wait
+        lane.wait_max_s = max(lane.wait_max_s, wait)
+        lane.dispatched += 1
+        lane.running += 1
+        return task
+
     def _pop_maintenance_locked(self) -> Optional[_Task]:
-        if not self._maint or self._heap or self._running_ckpt:
+        if not self._maint or self._queued_ckpt_locked() or self._running_ckpt:
             return None  # checkpoint lanes not idle
         now = time.monotonic()
         due = [t for t in self._maint
@@ -294,7 +514,7 @@ class ActiveBackend:
         """How long to wait for work: the backoff / rate-window remainder
         when only deferred maintenance is pending, else indefinitely (woken
         by submit / completion / shutdown notifies)."""
-        if not self._maint or self._heap or self._running_ckpt:
+        if not self._maint or self._queued_ckpt_locked() or self._running_ckpt:
             return None
         now = time.monotonic()
         due = [t for t in self._maint
@@ -311,8 +531,9 @@ class ActiveBackend:
             with self._cv:
                 task = None
                 while task is None:
-                    if self._heap:
-                        task, is_ckpt = heapq.heappop(self._heap), True
+                    task = self._pop_ckpt_locked()
+                    if task is not None:
+                        is_ckpt = True
                         break
                     task = self._pop_maintenance_locked()
                     if task is not None:
@@ -344,6 +565,9 @@ class ActiveBackend:
                 self._running.remove((task.kind, task.version))
                 if is_ckpt:
                     self._running_ckpt -= 1
+                    lane = self._lanes.get(task.stream)
+                    if lane is not None:
+                        lane.running -= 1
                 self._cv.notify_all()
 
     # ------------------------------------------------------------------
@@ -352,7 +576,7 @@ class ActiveBackend:
         """Block until matching tasks drain.  Returns False on timeout."""
 
         def outstanding():
-            pend = [t for t in self._heap + self._maint
+            pend = [t for t in self._all_queued_locked()
                     if (kind is None or t.kind == kind)
                     and (version is None or t.version == version)]
             if pend:
@@ -383,16 +607,22 @@ class ActiveBackend:
         — a busy worker no longer makes every unrelated pair read
         "running".
 
-        With no arguments: a backend-wide snapshot dict (queue depths,
-        in-flight tasks, error count) including per-lock
-        contention/hold-time stats from the runtime concurrency checker
-        (``locks`` is empty unless the checker is enabled)."""
+        With no arguments: a backend-wide snapshot dict — total queue
+        depths, in-flight tasks, error count, per-lock contention stats
+        (``locks`` is empty unless the runtime checker is enabled), and a
+        ``lanes`` map with per-stream contention counters: queued
+        tasks/bytes, running, admitted/rejected (admission control),
+        dispatched, max/total lane wait seconds, weight, and the lane's
+        private rate budget if one is configured."""
         if kind is None and version is None:
             with self._cv:
-                snap = {"queued": len(self._heap),
+                snap = {"queued": sum(len(ln.heap)
+                                      for ln in self._lanes.values()),
                         "maintenance": len(self._maint),
                         "running": list(self._running),
-                        "errors": len(self._errors)}
+                        "errors": len(self._errors),
+                        "lanes": {name: lane.stats()
+                                  for name, lane in self._lanes.items()}}
             snap["locks"] = concurrency.lock_stats()
             return snap
         if kind is None or version is None:
@@ -400,7 +630,7 @@ class ActiveBackend:
         with self._cv:
             if (kind, version) in self._done:
                 return self._done[(kind, version)]
-            for t in self._heap + self._maint:
+            for t in self._all_queued_locked():
                 if t.kind == kind and t.version == version:
                     return "queued"
             if (kind, version) in self._running:

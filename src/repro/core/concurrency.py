@@ -24,12 +24,17 @@ canonical lock order and recorded in a global lock-order graph:
             no external-tier I/O may run while it is held
   rank 30   cluster._vlocks[...]        per-version rewrite
   rank 32   cluster._plocks[...]        per-pack rewrite
-  rank 40   backend._cv                 ActiveBackend queue condition
+  rank 40   backend._cv                 ActiveBackend queue condition — ALL
+            per-stream lane state (heaps, deficit credits, admission
+            counters) lives under this single condition; lanes add no new
+            lock
   rank 44   reader_pool._cv             restore-side bounded fetch pool
   rank 46   cluster._seg_lock           shared segment/pack blob cache
             (single-flight condition: loser readers wait here while the
             winner fetches WITHOUT the lock held)
-  rank 50   leaf guards (_plock_guard, _cat_guard, RateLimiter)
+  rank 50   leaf guards (_plock_guard, _cat_guard, RateLimiter — including
+            the per-stream lane limiters ``backend.lane.<stream>._lock``;
+            limiter buckets are charged sequentially, never nested)
   rank 60   StorageTier._lock           per-tier accounting
   rank 62   KVTier._journal_lock        journal append/compact
   rank 70   CheckpointFuture._lock      callback/level bookkeeping

@@ -17,9 +17,25 @@ from __future__ import annotations
 import time
 from typing import Optional
 
-from repro.core.backend import ActiveBackend
+from repro.core.backend import ActiveBackend, AdmissionError
 from repro.core.future import CheckpointError, CheckpointFuture
 from repro.core.modules import CheckpointContext, Module
+
+
+def _payload_estimate(ctx: CheckpointContext) -> int:
+    """Best-effort payload size for lane admission accounting: the
+    serialized shard when the blocking front already produced one, else
+    the summed region bytes (0 for deferred/device captures — admission
+    then falls back to task-count high-water marks)."""
+    if ctx.shard is not None:
+        return len(ctx.shard)
+    if not isinstance(ctx.regions, (list, tuple)):
+        return 0  # deferred D2H thunk: size unknown until it runs
+    total = 0
+    for r in ctx.regions:
+        arr = getattr(r, "array", None)
+        total += int(arr.nbytes) if arr is not None else 0
+    return total
 
 
 class Engine:
@@ -117,9 +133,22 @@ class Engine:
             on_drop = None
             if future is not None:
                 on_drop = lambda: future._finish(superseded=True)  # noqa: E731
-            self.backend.submit(
-                f"pipe:{ctx.name}:{ctx.rank}", ctx.version, run_rest,
-                priority=50, supersede=True, on_drop=on_drop)
+            try:
+                self.backend.submit(
+                    f"pipe:{ctx.name}:{ctx.rank}", ctx.version, run_rest,
+                    priority=50, supersede=True, on_drop=on_drop,
+                    stream=ctx.name, nbytes=_payload_estimate(ctx))
+            except AdmissionError as e:
+                # The stream's lane is over its high-water mark (e.g. a
+                # wedged external tier backing it up).  Resolve as a
+                # *skipped* checkpoint with a diagnostic — same contract as
+                # the interval module — so this tenant degrades alone
+                # instead of queueing unboundedly behind its own backlog.
+                ctx.skipped = True
+                ctx.results["skip_reason"] = "admission"
+                ctx.results["admission"] = str(e)
+                if future is not None:
+                    future._finish()
         return ctx
 
     def wait(self, name: str, rank: int, version: Optional[int] = None,

@@ -443,17 +443,28 @@ class FlushModule(Module):
             ctx.results["l3_seal_retry_scheduled"] = scheduled
 
     def _paced_budget(self, ctx, nbytes: int):
-        """Charge ``nbytes`` to the cluster rate limiter in chunk-sized
+        """Charge ``nbytes`` to the flush rate budget in chunk-sized
         acquires with phase-gate sleeps between them — bounding the
         interference window whether the bytes then go out as a direct put
-        or as part of a sealed segment."""
-        limiter = ctx.cluster.rate_limiter
+        or as part of a sealed segment.  With a lane budget configured for
+        this stream (multi-tenant backends), bytes are charged against the
+        stream's private bucket first and the cluster-global bucket second
+        — each tenant is bounded by its carve-out AND the shared total."""
+        limiters = []
+        backend = getattr(ctx.engine, "backend", None) if ctx.engine else None
+        if backend is not None:
+            lane = backend.lane_limiter(ctx.name)
+            if lane is not None:
+                limiters.append(lane)
+        limiters.append(ctx.cluster.rate_limiter)
         gate = ctx.cluster.phase_gate
         if nbytes <= self.chunk_bytes:
-            limiter.acquire(nbytes)
+            for lim in limiters:
+                lim.acquire(nbytes)
             return
         for off in range(0, nbytes, self.chunk_bytes):
-            limiter.acquire(min(self.chunk_bytes, nbytes - off))
+            for lim in limiters:
+                lim.acquire(min(self.chunk_bytes, nbytes - off))
             if gate is not None:
                 w = gate()
                 if w > 0:

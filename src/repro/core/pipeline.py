@@ -123,7 +123,27 @@ class PipelineSpec:
     blocking_cut: int = 5
     backend_workers: int = 2
     phase_predictor: str = "none"           # none | ema | gru
-    keep_versions: int = 3                  # GC horizon (0 disables GC)
+    keep_versions: int = 3                  # GC horizon (0 = no count limit)
+    #: per-stream age-based retention: versions older than this many
+    #: seconds are retired by GC even when inside the ``keep_versions``
+    #: window (the newest version always survives, and a retained delta
+    #: still pins its full base + chain whatever their age).  None = no
+    #: age limit; GC runs when either retention knob is set.
+    max_age_s: Optional[float] = None
+    # ---- tenant / lane knobs (multi-stream backends) -----------------
+    #: deficit-round-robin share of the backend's workers relative to the
+    #: other streams on the same backend (2.0 = served twice as often)
+    lane_weight: float = 1.0
+    #: private flush-byte budget for this stream: explicit bytes/sec ...
+    lane_rate_bps: Optional[float] = None
+    #: ... or a fraction carved from the cluster's global rate limit
+    #: (mutually exclusive with lane_rate_bps)
+    lane_rate_share: Optional[float] = None
+    #: admission high-water marks: refuse (skip) new checkpoints for this
+    #: stream once this many of its tasks are queued+running / this many
+    #: payload bytes are queued on its lane.  None = never refuse.
+    admit_max_queued: Optional[int] = None
+    admit_max_queued_bytes: Optional[int] = None
     #: aggregated write path: stage every L3 blob of a version (shards,
     #: parity, manifests) into one segment put on an opted-in external tier
     aggregate: bool = False
@@ -218,5 +238,40 @@ class PipelineSpec:
             raise ValueError(
                 'aggregate=True requires the "flush" module (the last '
                 "rank's flush seals the version's segment)")
+        self.validate_tenant_knobs()
         return Engine(self.build_modules(), backend,
                       blocking_cut=self.blocking_cut)
+
+    def validate_tenant_knobs(self):
+        """Reject tenant/retention knob combinations at compile time, not
+        mid-checkpoint: misconfigured admission or budgets on one stream
+        of a shared backend would otherwise surface as another tenant's
+        mystery latency."""
+        if self.keep_versions < 0:
+            raise ValueError(
+                f"keep_versions must be >= 0, got {self.keep_versions}")
+        if self.max_age_s is not None and self.max_age_s <= 0:
+            raise ValueError(
+                f"max_age_s must be > 0 (or None), got {self.max_age_s}")
+        if self.lane_weight <= 0:
+            raise ValueError(
+                f"lane_weight must be > 0, got {self.lane_weight}")
+        if self.lane_rate_bps is not None and self.lane_rate_share is not None:
+            raise ValueError(
+                "set lane_rate_bps or lane_rate_share, not both")
+        if self.lane_rate_bps is not None and self.lane_rate_bps <= 0:
+            raise ValueError(
+                f"lane_rate_bps must be > 0, got {self.lane_rate_bps}")
+        if self.lane_rate_share is not None \
+                and not 0 < self.lane_rate_share <= 1:
+            raise ValueError(
+                f"lane_rate_share must be in (0, 1], got "
+                f"{self.lane_rate_share}")
+        if self.admit_max_queued is not None and self.admit_max_queued < 1:
+            raise ValueError(
+                f"admit_max_queued must be >= 1, got {self.admit_max_queued}")
+        if self.admit_max_queued_bytes is not None \
+                and self.admit_max_queued_bytes < 1:
+            raise ValueError(
+                f"admit_max_queued_bytes must be >= 1, got "
+                f"{self.admit_max_queued_bytes}")

@@ -55,6 +55,19 @@ def main(argv=None):
     ap.add_argument("--phase-predictor", default="ema",
                     choices=["none", "ema", "gru"])
     ap.add_argument("--scratch", default="/tmp/veloc_train")
+    ap.add_argument("--keep-versions", type=int, default=0,
+                    help="retain only the newest N checkpoints (0 = all)")
+    ap.add_argument("--max-age-s", type=float, default=None,
+                    help="retire checkpoints older than this many seconds")
+    ap.add_argument("--lane-weight", type=float, default=1.0,
+                    help="fair-share weight of this job's backend lane "
+                         "when the scratch/backend is shared")
+    ap.add_argument("--lane-rate-share", type=float, default=None,
+                    help="fraction (0,1] of the cluster flush budget "
+                         "this job's lane may use")
+    ap.add_argument("--admit-max-queued", type=int, default=None,
+                    help="admission high-water mark: over this many "
+                         "queued+running checkpoints, new ones skip")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--fail-at", type=int, default=-1,
                     help="simulate node failure after this step")
@@ -80,6 +93,11 @@ def main(argv=None):
         modules=modules,
         phase_predictor=args.phase_predictor,
         device_delta=args.device_delta,
+        keep_versions=args.keep_versions,
+        max_age_s=args.max_age_s,
+        lane_weight=args.lane_weight,
+        lane_rate_share=args.lane_rate_share,
+        admit_max_queued=args.admit_max_queued,
     )
     client = None
     if args.mode != "off":

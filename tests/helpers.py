@@ -106,6 +106,30 @@ class CountingTier(WrappedTier):
                 self._inflight -= 1
 
 
+class StallingTier(WrappedTier):
+    """Blocks ``put`` on an event for keys matching ``match`` — a wedged
+    external tier (hung NFS mount, throttled object store) rather than a
+    fast-failing one.  ``release()`` un-wedges every blocked and future
+    put; ``stalled`` counts puts that hit the wedge."""
+
+    def __init__(self, inner: StorageTier, *, match: str = "",
+                 timeout_s: float = 30.0):
+        super().__init__(inner)
+        self.match = match
+        self.timeout_s = timeout_s
+        self.stalled: list[str] = []
+        self._gate = threading.Event()
+
+    def release(self):
+        self._gate.set()
+
+    def put(self, key, data):
+        if self.match in key and not self._gate.is_set():
+            self.stalled.append(key)
+            self._gate.wait(self.timeout_s)
+        return self.inner.put(key, data)
+
+
 class CorruptingTier(WrappedTier):
     """Returns corrupted bytes from ``get`` for keys matching ``match``:
     flips one byte at ``offset`` (from the end when negative).  Storage

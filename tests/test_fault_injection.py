@@ -2,11 +2,13 @@
 tier faults (FlakyTier / CorruptingTier) against the pipeline's graceful
 degradation and restart's L1 -> partner -> parity -> L3 fallback, including
 delta-chain loss."""
+import time
+
 import numpy as np
 import pytest
 
-from helpers import CorruptingTier, FlakyTier, wrap_external_tiers, \
-    wrap_node_tiers
+from helpers import CorruptingTier, FlakyTier, StallingTier, \
+    wrap_external_tiers, wrap_node_tiers
 from repro.core import Cluster, VelocClient, VelocConfig
 from repro.core import format as fmt
 from repro.core import restart as rst
@@ -323,3 +325,62 @@ def test_flaky_journal_kv_restart(tmp_path):
     surviving = [k for k in ("a/b", "c/d") if k not in kv2.journal_skipped]
     assert all(kv2.get(k) is not None for k in surviving)
     assert kv2.get(kv2.journal_skipped[0]) is None
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant fault isolation
+# ---------------------------------------------------------------------------
+
+
+def test_wedged_tenant_does_not_starve_neighbor(tmp_path):
+    """Two streams share one Cluster + ActiveBackend; stream A's external
+    puts wedge (hung object store).  A's lane backs up and trips
+    admission, while B — on its own lane and worker — keeps completing
+    checkpoints promptly the whole time."""
+    def tenant_cfg(name, **kw):
+        return VelocConfig(name=name, scratch=str(tmp_path), mode="async",
+                           backend_workers=2, partner=False, xor_group=0,
+                           keep_versions=0, flush=True, **kw)
+
+    cfg_a = tenant_cfg("wedged", admit_max_queued=1)
+    cfg_b = tenant_cfg("healthy")
+    cluster = Cluster(cfg_a, nranks=1)
+    stallers = wrap_external_tiers(
+        cluster, lambda t: StallingTier(t, match="wedged/", timeout_s=60.0))
+    a = VelocClient(cfg_a, cluster)
+    b = VelocClient(cfg_b, cluster, backend=a.backend)
+    state = {"w": np.arange(4096, dtype=np.float32)}
+
+    fut_a1 = a.checkpoint(state, version=1, device_snapshot=False)
+    deadline = time.monotonic() + 10
+    while not any(s.stalled for s in stallers):  # A v1 wedged in its put
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    # A's lane is at its high-water mark (1 running) -> a second submit
+    # is admission-skipped, not queued behind the wedge
+    fut_a2 = a.checkpoint(state, version=2, device_snapshot=False)
+    assert fut_a2.skipped
+    assert fut_a2.results["skip_reason"] == "admission"
+
+    # B completes a run of checkpoints promptly while A stays wedged
+    t0 = time.monotonic()
+    for v in range(1, 4):
+        fut = b.checkpoint({"w": np.full(4096, float(v), np.float32)},
+                           version=v, device_snapshot=False)
+        assert fut.result(timeout=15)
+    b_elapsed = time.monotonic() - t0
+    assert b_elapsed < 10.0, f"healthy tenant starved: {b_elapsed:.1f}s"
+    assert any(s.stalled for s in stallers)  # A was wedged the whole run
+
+    lanes = a.backend.status()["lanes"]
+    assert lanes["wedged"]["rejected"] >= 1
+    assert lanes["healthy"]["rejected"] == 0
+    assert lanes["healthy"]["dispatched"] >= 3
+
+    for s in stallers:
+        s.release()
+    assert fut_a1.result(timeout=30)
+    b.shutdown()   # non-owner: drains its own kinds, backend stays up
+    a.shutdown()
+    regs = rst.load_rank_regions(cluster, "healthy", 3, 0)
+    assert regs["w"][0] == 3.0
