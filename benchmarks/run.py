@@ -48,6 +48,13 @@ scale with the scaling factor stated in the ``derived`` column.
                   per-tenant p50/p95/p99, aggregate throughput, write
                   amplification, with the lane-fairness SLO (p99 spread
                   across equal-weight tenants) asserted in-bench.
+  bench_peer_restore  peer-assisted multi-source restore: a failed rank's
+                  chain served from the partner rank's L2 copies vs the
+                  L3-only world, with modeled per-tier RTTs — aggregate
+                  throughput (>=2x asserted in-bench), peer-served share
+                  of external-bound gets (>=50% asserted), and hedged
+                  reads under an intermittently stalling partner tier
+                  (hedge fires; p99 within 3x the healthy run, asserted).
   bench_scale     modeled weak-scaling of the L3 flush under shared-PFS
                   bandwidth (flush contention), from the storage model.
   bench_lock_overhead  runtime concurrency checker cost: tracked-lock
@@ -77,6 +84,10 @@ sys.path.insert(0, os.path.dirname(__file__))
 from stats import LatencyRecorder  # noqa: E402
 
 ROWS = []
+
+#: RNG seed for benchmarks that randomize payloads (``--seed`` overrides;
+#: a fixed default keeps runs reproducible and the CI artifact stable)
+SEED = 0
 
 
 def row(name, us, derived=""):
@@ -849,6 +860,241 @@ def bench_multitenant():
             w.shutdown()
 
 
+def bench_peer_restore():
+    """Peer-assisted multi-source restore: node 0 dies and 32 restore
+    requests for its chain are served by 8 concurrent readers from ONE
+    shared cluster.  The partner rank's L2 copies (direct ``.partner``
+    replicas of every version, packed deltas included) answer in
+    ~RTT_PEER; the modeled object store behind L3 answers in ~RTT_L3.
+    The L3-only baseline is the pre-peer world: a replacement node with
+    nothing node-local anywhere, every byte off the external tier
+    (``restore_cache_blobs=2`` keeps the shared blob cache honest —
+    evictions force repeated RTT payment, as on any real bounded cache).
+
+    In-bench assertions: >=2x aggregate throughput vs L3-only at 8
+    readers; >=50% of external-bound gets served by peer tiers
+    (``StorageTier.get_calls``); and with hedged reads on under an
+    intermittently stalling partner tier, the hedge demonstrably fires
+    and request p99 stays within 3x the healthy run's p99 (an unhedged
+    stall alone is several times it)."""
+    import threading
+
+    from repro.core import Cluster, VelocClient, VelocConfig
+    from repro.core import restart as rst
+    from repro.core.storage import StorageTier
+
+    nv = 9
+    n = (16 << 10) // 4    # 16 KiB of f32 state per rank: keeps per-hop
+    #                        digest CPU well under the modeled RTTs, so
+    #                        the bench times the fetch fabric, not checksums
+    reqs = 32
+    readers = 8
+    RTT_L3 = 0.060         # modeled object-store get round trip
+    RTT_PEER = 0.001       # modeled partner-node interconnect round trip
+    STALL_S = 0.150        # intermittent partner stall (degraded NIC)
+    HEDGE_FACTOR = 5.0
+    rng = np.random.default_rng(SEED)
+
+    root = "/tmp/veloc_bench_peer"
+    shutil.rmtree(root, ignore_errors=True)
+    cfg = VelocConfig(scratch=root, mode="sync", delta=True,
+                      delta_chunk_bytes=16 * 1024, delta_max_chain=16,
+                      partner=True, xor_group=0, flush=True,
+                      keep_versions=100, aggregate=True, pack_versions=2,
+                      catalog=True)
+
+    class ModeledTier(StorageTier):
+        """RTT-modeled remote device: wraps a real tier and sleeps the
+        round trip INSIDE the telemetry template (``_get`` override), so
+        the EWMA/read_cost the scheduler ranks on observe the modeled
+        latency — exactly what a real remote tier's telemetry would.
+        A miss pays a quarter round trip (a 404 carries no payload); a
+        hit pays the full one."""
+
+        def __init__(self, inner, rtt_s):
+            super().__init__(inner.info)
+            self.inner = inner
+            self.rtt_s = rtt_s
+            self.stall_keys: set = set()  # keys whose NEXT get stalls once
+
+        def _get(self, key):
+            blob = self.inner.get(key)
+            dt = self.rtt_s if blob is not None else self.rtt_s * 0.25
+            try:
+                self.stall_keys.remove(key)  # atomic take-once under GIL
+                dt += STALL_S
+            except KeyError:
+                pass
+            time.sleep(dt)
+            return blob
+
+        def put(self, key, data):
+            return self.inner.put(key, data)
+
+        def exists(self, key):
+            return self.inner.exists(key)
+
+        def _delete(self, key):
+            return self.inner.delete(key)
+
+        def _keys(self, prefix=""):
+            return self.inner.keys(prefix)
+
+    def build_corpus(cluster):
+        clients = [VelocClient(cfg, cluster, rank=r) for r in range(2)]
+        w = [rng.standard_normal(n).astype(np.float32) + r
+             for r in range(2)]
+        dirty = max(1, n // 64)
+        states = {}
+        for v in range(1, nv + 1):
+            for r, c in enumerate(clients):
+                wv = w[r].copy()
+                lo = (v * 9973) % (n - dirty)
+                wv[lo:lo + dirty] += 1.0
+                w[r] = wv
+                c.checkpoint({"w": wv}, version=v, device_snapshot=False)
+            states[v] = w[0].copy()
+        for c in clients:
+            c.shutdown()
+        return states
+
+    #: mixed request load: analysis jobs attach to DIFFERENT checkpoints
+    #: (versions 2..nv round-robin), so the bounded blob cache sees a
+    #: realistic working set instead of one all-hot chain
+    targets = [2 + (i % (nv - 1)) for i in range(reqs)]
+
+    def serve(cluster, label, plan=None):
+        """32 requests across 8 reader threads, one shared plan; returns
+        (LatencyRecorder, wall_s).  Callers that must arm fault
+        injection AFTER the plan's catalog probes pass a prebuilt
+        ``plan``."""
+        lats = LatencyRecorder(label)
+        errs = []
+        barrier = threading.Barrier(readers)
+
+        def reader(i, plan):
+            try:
+                barrier.wait()
+                for j in range(i, reqs, readers):
+                    v = targets[j]
+                    r0 = time.perf_counter()
+                    with lats.timed():
+                        regs = rst.load_rank_regions(cluster, cfg.name, v,
+                                                     0, plan=plan)
+                    if os.environ.get("PEER_DEBUG"):
+                        dt = time.perf_counter() - r0
+                        if dt > 0.1:
+                            print(f"  slow req v{v} reader{i} {dt*1e3:.1f}ms")
+                    got = regs["w"].view(np.float32)
+                    assert np.array_equal(got, expect[v]), "bytes diverge"
+            except Exception as e:  # noqa: BLE001 — re-raised below
+                errs.append(e)
+
+        # plan building is a one-time catalog read, not the serving path
+        # under test — keep it outside the timed window
+        if plan is None:
+            plan = rst.plan_restore(cluster, cfg.name)
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=reader, args=(i, plan))
+                   for i in range(readers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        assert not errs, errs
+        return lats, wall
+
+    def gets(tiers):
+        return sum(t.get_calls for t in tiers)
+
+    # --- corpus + peer-serving cluster (node 0 fails, partner survives)
+    cluster = Cluster(cfg, nranks=2, restore_readers=readers,
+                      restore_cache_blobs=2, peer_seal_copies=True)
+    expect = build_corpus(cluster)  # version -> rank 0's true state
+    cluster.fail_node(0)
+    cluster._node_tiers[1] = [ModeledTier(t, RTT_PEER)
+                              for t in cluster._node_tiers[1]]
+    cluster.external_tiers = [ModeledTier(t, RTT_L3)
+                              for t in cluster.external_tiers]
+    peer_tiers = cluster._node_tiers[1]
+    ext_tiers = cluster.external_tiers
+
+    # --- healthy peer-assisted run ------------------------------------
+    p0, e0 = gets(peer_tiers), gets(ext_tiers)
+    lats_peer, wall_peer = serve(cluster, "peer")
+    peer_gets = gets(peer_tiers) - p0
+    ext_gets = gets(ext_tiers) - e0
+    share = peer_gets / max(peer_gets + ext_gets, 1)
+    tput_peer = reqs / wall_peer
+    assert share >= 0.5, (
+        f"peer tiers served {share:.0%} of external-bound gets (< 50%)")
+    row(f"peer_restore_{readers}r_{reqs}req", lats_peer.mean_us,
+        f"{lats_peer.summary()},wall={wall_peer * 1e3:.0f}ms,"
+        f"peer_share={share:.2f},peer_gets={peer_gets},l3_gets={ext_gets}")
+
+    # --- hedged run: partner tier intermittently stalls ---------------
+    # one deterministic stall, keyed to the partner replica of a version
+    # whose sealed segment ALSO has a peer copy on the survivor — the
+    # hedge escalates past the stalled replica and recovers at
+    # interconnect speed from the seal copy, the multi-source case this
+    # whole bench exists to exercise.  The plan is built BEFORE arming
+    # the stall: with ``peer_seal_copies`` on, planning's catalog probes
+    # also land on the peer tier and must not absorb the fault in the
+    # untimed window.
+    from repro.core import format as vfmt
+    cluster.restore_hedge_factor = HEDGE_FACTOR
+    hedge_plan = rst.plan_restore(cluster, cfg.name)
+    stall_v = next(v for v in range(2, nv + 1)
+                   if cluster._peer_seal_home(
+                       vfmt.segment_key(cfg.name, v)) == 1)
+    stall_tier = peer_tiers[0]
+    stall_tier.stall_keys = {
+        vfmt.shard_key(cfg.name, stall_v, 0) + ".partner"}
+    lats_hedge, wall_hedge = serve(cluster, "hedged", plan=hedge_plan)
+    fired = sum(t.hedge_wins + t.hedge_losses
+                for ts in cluster._node_tiers for t in ts) + \
+        sum(t.hedge_wins + t.hedge_losses for t in cluster.external_tiers)
+    wins = sum(t.hedge_wins for ts in cluster._node_tiers for t in ts) + \
+        sum(t.hedge_wins for t in cluster.external_tiers)
+    if os.environ.get("PEER_DEBUG"):
+        print("hedged lats ms:",
+              sorted(round(s * 1e3, 1) for s in lats_hedge.samples))
+        for ts, lbl in ((peer_tiers, "peer"), (ext_tiers, "ext")):
+            for t in ts:
+                print(lbl, t.info.name, "gets", t.get_calls,
+                      "ewma_ms", round((t.ewma_get_s or 0) * 1e3, 2),
+                      "wins", t.hedge_wins, "losses", t.hedge_losses,
+                      "miss_streak", t.miss_streak)
+    assert fired > 0, "hedge never fired despite stalling partner tier"
+    healthy_p99 = lats_peer.p99_ms()
+    hedged_p99 = lats_hedge.p99_ms()
+    assert hedged_p99 <= 3.0 * healthy_p99, (
+        f"hedged p99 {hedged_p99:.1f}ms > 3x healthy {healthy_p99:.1f}ms")
+    row(f"peer_restore_hedged_{readers}r_{reqs}req", lats_hedge.mean_us,
+        f"{lats_hedge.summary()},wall={wall_hedge * 1e3:.0f}ms,"
+        f"hedge_fired={fired},hedge_wins={wins},"
+        f"p99_vs_healthy={hedged_p99 / max(healthy_p99, 1e-9):.2f}x")
+    stall_tier.stall_keys = set()
+
+    # --- L3-only baseline: replacement node, nothing node-local -------
+    baseline = Cluster(cfg, nranks=2, restore_readers=readers,
+                       restore_cache_blobs=2)
+    for tiers in baseline._node_tiers:
+        for t in tiers:
+            t.wipe()
+    baseline.external_tiers = [ModeledTier(t, RTT_L3)
+                               for t in baseline.external_tiers]
+    lats_l3, wall_l3 = serve(baseline, "l3_only")
+    tput_l3 = reqs / wall_l3
+    speedup = tput_peer / tput_l3
+    assert speedup >= 2.0, (
+        f"peer-assisted throughput {speedup:.2f}x < 2x the L3-only world")
+    row(f"peer_restore_l3only_{readers}r_{reqs}req", lats_l3.mean_us,
+        f"{lats_l3.summary()},wall={wall_l3 * 1e3:.0f}ms,"
+        f"peer_speedup={speedup:.2f}x")
+
+
 def bench_scale():
     """Weak-scaling model of the L3 flush: N nodes share the PFS; per-node
     flush time grows linearly while L1+L2 stay flat — the paper's core
@@ -967,11 +1213,12 @@ ALL_BENCHES = (bench_levels, bench_engine, bench_erasure, bench_capture,
                bench_async, bench_delta, bench_device_delta,
                bench_aggregation, bench_packing,
                bench_restart, bench_restore_serving, bench_multitenant,
-               bench_interval, bench_scale,
+               bench_peer_restore, bench_interval, bench_scale,
                bench_lock_overhead)
 
 
 def main(argv=None) -> None:
+    global SEED
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--json", metavar="FILE",
                     help="also write the rows as a JSON list "
@@ -979,7 +1226,11 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated name substrings; run only "
                          "matching benchmarks (e.g. 'delta,engine')")
+    ap.add_argument("--seed", type=int, default=SEED,
+                    help="RNG seed for randomized payloads (default "
+                         f"{SEED}; fixed so CI artifacts are stable)")
     args = ap.parse_args(argv)
+    SEED = args.seed
     benches = ALL_BENCHES
     if args.only:
         pats = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -116,6 +116,18 @@ class VelocConfig:
     #                                     (<=1 = serial chain walk)
     restore_cache_blobs: int = 16       # shared segment/pack blob cache
     #                                     bound (whole blobs pinned in RAM)
+    restore_hedge_factor: float = 0.0   # hedged restore reads: when the
+    #                                     primary source's fetch exceeds
+    #                                     this multiple of its EWMA get
+    #                                     latency, launch the next-ranked
+    #                                     source and take the first hit
+    #                                     (0 = off)
+    peer_seal_copies: bool = False      # replicate each sealed segment /
+    #                                     pack blob to one peer node's
+    #                                     fastest tier (consistent-hash
+    #                                     home) so restores can read it
+    #                                     from L2 instead of the external
+    #                                     store
 
     # -- compilation to the v2 specs ------------------------------------
     def to_pipeline_spec(self) -> PipelineSpec:
@@ -212,7 +224,9 @@ class Cluster:
                  rate_limit_bps: Optional[float] = None,
                  aggregate: Optional[bool] = None,
                  restore_readers: Optional[int] = None,
-                 restore_cache_blobs: Optional[int] = None):
+                 restore_cache_blobs: Optional[int] = None,
+                 restore_hedge_factor: Optional[float] = None,
+                 peer_seal_copies: Optional[bool] = None):
         if isinstance(topology, VelocConfig):
             self.cfg: Optional[VelocConfig] = topology
             if group_size is None:
@@ -226,6 +240,12 @@ class Cluster:
             if restore_cache_blobs is None:
                 restore_cache_blobs = getattr(
                     topology, "restore_cache_blobs", None)
+            if restore_hedge_factor is None:
+                restore_hedge_factor = getattr(
+                    topology, "restore_hedge_factor", None)
+            if peer_seal_copies is None:
+                peer_seal_copies = getattr(
+                    topology, "peer_seal_copies", None)
             topology = topology.to_tier_topology()
         else:
             self.cfg = None
@@ -292,14 +312,39 @@ class Cluster:
         self._seg_lock = concurrency.TrackedCondition(
             "cluster._seg_lock", concurrency.RANK_READCACHE)
         self._segcache: dict[tuple, fmt.SegmentReader] = {}
-        self._seg_loading: set = set()  # (tier, key) fetches in flight
+        #: (tier, key) -> {"done", "reader"} for blob fetches in flight:
+        #: the loader hands its parsed reader to waiters THROUGH the
+        #: entry, so a concurrent eviction from the bounded LRU between
+        #: the loader caching it and a waiter waking can never force the
+        #: waiter to re-pay the fetch it just waited out
+        self._seg_loading: dict = {}
         self._segcache_max = int(restore_cache_blobs
                                  if restore_cache_blobs is not None
                                  else self._SEGCACHE_MAX)
+        #: adaptive external probe order: per-tier count of consecutive
+        #: direct-key misses that then resolved inside the per-version
+        #: segment.  Past ``_SEG_BIAS_THRESHOLD`` the probe flips
+        #: segment-first, so sealed streams stop paying a guaranteed
+        #: miss round trip on every shard fetch (benign-racy counters:
+        #: worst case is one extra cheap probe, never a wrong answer)
+        self._seg_bias: dict[str, int] = {}
         #: restore serving: bounded fetch pool width (<=1 = serial walk)
         self.restore_readers = int(restore_readers
                                    if restore_readers is not None else 4)
         self._reader_pool = None
+        #: hedged restore reads: budget = factor * primary EWMA latency
+        #: before the next-ranked source is launched (0 = off)
+        self.restore_hedge_factor = float(restore_hedge_factor or 0.0)
+        #: seal-time peer replication of segment/pack blobs (see
+        #: ``_peer_seal_home``); read side always probes the home when the
+        #: knob is on, so writer and reader agree without coordination
+        self.peer_seal_copies = bool(peer_seal_copies)
+        #: narrowed write-behind window: when set, a successful seal /
+        #: re-seal queues this hook (maintenance-lane catalog sync) instead
+        #: of syncing inline — async clients install a coalesced
+        #: ``submit_maintenance`` here.  Unset, the post-seal sync runs
+        #: inline on the sealing thread.
+        self.catalog_sync_soon: Optional[Callable[[str, int], None]] = None
         #: torn / corrupt segments observed while reading (restart surfaces
         #: these per candidate instead of silently decoding garbage)
         self.segment_diagnostics: list[dict] = []
@@ -398,10 +443,18 @@ class Cluster:
                     self._segcache.pop(ck)
                     self._segcache[ck] = reader
                     return reader, False
-                if ck not in self._seg_loading:
-                    self._seg_loading.add(ck)
+                entry = self._seg_loading.get(ck)
+                if entry is None:
+                    entry = {"done": False, "reader": None}
+                    self._seg_loading[ck] = entry
                     break
                 self._seg_lock.wait(1.0)
+                if entry["done"]:
+                    # direct handoff from the loader: immune to the LRU
+                    # evicting the reader before this waiter woke up
+                    if entry["reader"] is not None:
+                        return entry["reader"], False
+                    # loader failed — loop and retry (maybe as loader)
         reader, err = None, None
         try:
             blob = self._tier_get(tier, skey)
@@ -414,7 +467,10 @@ class Cluster:
             with self._seg_lock:
                 if reader is not None:
                     self._cache_segment_locked(tier.info.name, skey, reader)
-                self._seg_loading.discard(ck)
+                entry["done"] = True
+                entry["reader"] = reader
+                if self._seg_loading.get(ck) is entry:
+                    del self._seg_loading[ck]
                 self._seg_lock.notify_all()
         if err is not None:
             self._diagnose_segment(tier.info.name, skey, err)
@@ -919,8 +975,51 @@ class Cluster:
                     "attempts": 0, "scheduled": False}
             raise
         self._cache_seal_job(tier, job, seg)
+        self._peer_replicate_seal(job, seg)
         with self._lock:
             self._cat_note_seal_locked(name, job)
+        self._post_seal_sync(name, max(versions))
+
+    def _peer_replicate_seal(self, job: dict, seg: bytes):
+        """Best-effort L2 copy of a freshly sealed segment/pack blob onto
+        its consistent-hash home node (``peer_seal_copies``).  A pure read
+        accelerator: durability already landed on the external tier, so a
+        failed copy is diagnosed and ignored.  Runs with NO locks held —
+        this is tier I/O."""
+        if not self.peer_seal_copies or self.nranks <= 1:
+            return
+        home = self._peer_seal_home(job["skey"])
+        tiers = self._node_tiers[home] if 0 <= home < self.nranks else []
+        if not tiers:
+            return
+        tier = tiers[0]
+        try:
+            tier.put(job["skey"], seg)
+        except Exception as e:  # noqa: BLE001 — accelerator only; the
+            # sealed blob is durable on the external tier regardless
+            self._diagnose_segment(tier.info.name, job["skey"], e)
+
+    def _post_seal_sync(self, name: str, version: int):
+        """Queue (or run) the catalog sync RIGHT AFTER a successful seal,
+        narrowing the write-behind window: without this, a crash between
+        the seal and the next scheduled sync left the newest sealed
+        version invisible to catalog-first restore planning.  Prefers the
+        client-installed ``catalog_sync_soon`` hook (coalesced maintenance
+        work off the critical path); falls back to an inline sync.  Called
+        with NO locks held — ``sync_catalog`` takes RANK_CATALOG
+        outermost."""
+        if not self.catalog_tiers():
+            return
+        hook = self.catalog_sync_soon
+        if hook is not None:
+            try:
+                hook(name, version)
+                return
+            except RuntimeError as e:  # backend stopped mid-shutdown:
+                # fall through to the inline sync so the seal still lands
+                self._diagnose_catalog(None, name,
+                                       f"post-seal sync hook: {e}")
+        self.sync_catalog(name)
 
     # -- bounded seal retry ---------------------------------------------
     def _find_seal_retry_locked(self, name: str, version: int
@@ -1017,6 +1116,8 @@ class Cluster:
                 self._seal_errors.pop((name, v), None)
             self._cat_note_seal_locked(name, job)
         self._cache_seal_job(tier, job, seg)
+        self._peer_replicate_seal(job, seg)
+        self._post_seal_sync(name, max(job["versions"]))
         return True
 
     def schedule_seal_retry(self, backend, name: str, retries: int, *,
@@ -1327,6 +1428,55 @@ class Cluster:
         self._parents[(name, version)] = dmeta.get("parent") \
             if dmeta.get("kind") == "delta" else None
 
+    #: consecutive direct-miss-then-segment-hit probes before an external
+    #: tier's shard probe flips segment-first (see ``_seg_bias``)
+    _SEG_BIAS_THRESHOLD = 2
+
+    def _external_shard_probe(self, tier: StorageTier, name: str,
+                              version: int, key: str,
+                              packed: Optional[str]) -> Optional[bytes]:
+        """One external tier's full shard probe: rolling pack / direct
+        key / per-version segment, ordered by what pack membership
+        (catalog-seeded or scanned) already says about the version so the
+        common case pays one get, not two guaranteed miss-probes.
+
+        The direct/segment order ADAPTS per tier: once
+        ``_SEG_BIAS_THRESHOLD`` consecutive probes miss the direct key
+        and then resolve inside the sealed segment, later probes lead
+        with the segment — on a remote store every guaranteed-miss
+        direct get is a full metadata round trip, and a sealed stream
+        pays it on every shard of every restore.  A direct-key hit at
+        any point resets the bias, so streams that publish direct
+        copies again (fresh version before its seal) fall back to the
+        cheap-first order by themselves."""
+        if packed is not None:
+            blob = self._pack_entry(tier, name, version, key)
+            if blob is None:
+                blob = self._tier_get(tier, key)
+            if blob is None:
+                blob = self._segment_entry(tier, name, version, key)
+            return blob
+        bias = self._seg_bias.get(tier.info.name, 0)
+        if bias >= self._SEG_BIAS_THRESHOLD:
+            blob = self._segment_entry(tier, name, version, key)
+            if blob is not None:
+                return blob
+            blob = self._tier_get(tier, key)
+            if blob is not None:
+                self._seg_bias[tier.info.name] = 0  # direct serves again
+                return blob
+            return self._pack_entry(tier, name, version, key)
+        blob = self._tier_get(tier, key)
+        if blob is not None:
+            if bias:
+                self._seg_bias[tier.info.name] = 0
+            return blob
+        blob = self._segment_entry(tier, name, version, key)
+        if blob is not None:
+            self._seg_bias[tier.info.name] = bias + 1
+            return blob
+        return self._pack_entry(tier, name, version, key)
+
     def fetch_shard(self, name: str, version: int, rank: int) -> Optional[bytes]:
         key = fmt.shard_key(name, version, rank)
         for tier in self._node_tiers[rank]:
@@ -1336,25 +1486,102 @@ class Cluster:
         with self._lock:
             packed = self._packed.get((name, version))
         for tier in self.external_tiers:
-            if packed is not None:
-                # pack membership (catalog-seeded or scanned) says the
-                # shard lives in a rolling pack: go straight to the cached
-                # pack instead of paying two guaranteed miss-probes per
-                # hop per reader; other layouts stay as fallbacks.
-                blob = self._pack_entry(tier, name, version, key)
-                if blob is None:
-                    blob = self._tier_get(tier, key)
-                if blob is None:
-                    blob = self._segment_entry(tier, name, version, key)
-            else:
-                blob = self._tier_get(tier, key)
-                if blob is None:
-                    blob = self._segment_entry(tier, name, version, key)
-                if blob is None:
-                    blob = self._pack_entry(tier, name, version, key)
+            blob = self._external_shard_probe(tier, name, version, key,
+                                              packed)
             if blob is not None:
                 return blob
         return None
+
+    def _peer_seal_home(self, skey: str) -> int:
+        """Consistent-hash home node for a sealed blob's L2 peer copy.
+        Writer (``_do_seal_io``) and every reader derive the same node
+        from the key alone — no membership coordination, and the copies
+        spread across nodes instead of piling on one."""
+        return sum(skey.encode()) % max(self.nranks, 1)
+
+    def _peer_blob_entry(self, name: str, version: int, key: str,
+                         packed: Optional[str]) -> Optional[bytes]:
+        """Read one shard entry out of a peer node's L2 copy of the sealed
+        segment/pack blob (``peer_seal_copies``), through the same
+        single-flight cross-reader cache external blobs use.  Only probes
+        when the blob key is already known (packed membership or the
+        deterministic segment key) — never lists a node tier."""
+        skey = packed if packed is not None \
+            else fmt.segment_key(name, version)
+        home = self._peer_seal_home(skey)
+        if not (0 <= home < self.nranks):
+            return None
+        parse = fmt.PackReader if packed is not None else fmt.SegmentReader
+        for tier in self._node_tiers[home]:
+            reader, _ = self._cached_blob_reader(tier, skey, parse)
+            if reader is None or key not in reader:
+                continue
+            try:
+                return reader.read(key)
+            except Exception as e:  # noqa: BLE001 — corrupt entry = miss
+                self._diagnose_segment(tier.info.name, skey + "#" + key, e)
+        return None
+
+    def shard_sources(self, name: str, version: int, rank: int,
+                      *, distance: int = 1) -> list[dict]:
+        """Every source that should hold this shard's bytes, one probe
+        thunk each: the rank's own node tiers (direct key), the partner
+        rank's node tiers (``.partner`` replica, and — with
+        ``peer_seal_copies`` — the consistent-hash peer copy of the sealed
+        segment/pack blob), then each external tier's pack/direct/segment
+        probe.  Returned in nominal cheap-to-costly order; the restore
+        scheduler re-ranks by live ``read_cost()`` per fetch, so the list
+        order only breaks cost ties."""
+        from repro.core.erasure import partner_of
+
+        key = fmt.shard_key(name, version, rank)
+        with self._lock:
+            packed = self._packed.get((name, version))
+        sources: list[dict] = []
+
+        def add(tier, kind, fetch):
+            sources.append({"tier": tier, "kind": kind, "fetch": fetch})
+
+        for tier in self._node_tiers[rank]:
+            add(tier, "local",
+                lambda t=tier: self._tier_get(t, key))
+        holder = partner_of(rank, self.nranks, distance)
+        if holder != rank:
+            pkey = key + ".partner"
+            for tier in self._node_tiers[holder]:
+                add(tier, "partner",
+                    lambda t=tier: self._tier_get(t, pkey))
+        if self.peer_seal_copies and self.nranks > 1:
+            skey = packed if packed is not None \
+                else fmt.segment_key(name, version)
+            home = self._peer_seal_home(skey)
+            if 0 <= home < self.nranks and self._node_tiers[home]:
+                # one logical source: the home node's cached blob copy
+                # (tier shown = its fastest tier, where the copy lands)
+                add(self._node_tiers[home][0], "peer-seal",
+                    lambda: self._peer_blob_entry(name, version, key,
+                                                  packed))
+        for tier in self.external_tiers:
+            add(tier, "external",
+                lambda t=tier: self._external_shard_probe(
+                    t, name, version, key, packed))
+        return sources
+
+    def tier_read_stats(self) -> dict[str, dict]:
+        """Per-tier read telemetry snapshot (``StorageTier.read_stats``)
+        across the whole fabric.  Node tiers are keyed ``node<r>/<name>``
+        (tier names repeat across nodes), external tiers by name."""
+        out: dict[str, dict] = {}
+        for tier in self.external_tiers:
+            stats = getattr(tier, "read_stats", None)
+            if callable(stats):
+                out[tier.info.name] = stats()
+        for r, tiers in enumerate(self._node_tiers):
+            for tier in tiers:
+                stats = getattr(tier, "read_stats", None)
+                if callable(stats):
+                    out[f"node{r}/{tier.info.name}"] = stats()
+        return out
 
     def fetch_partner_copy(self, name: str, version: int, rank: int,
                            distance: int) -> Optional[bytes]:
@@ -1366,6 +1593,11 @@ class Cluster:
             blob = self._tier_get(tier, key)
             if blob is not None:
                 return blob
+        if self.peer_seal_copies and self.nranks > 1:
+            with self._lock:
+                packed = self._packed.get((name, version))
+            return self._peer_blob_entry(
+                name, version, fmt.shard_key(name, version, rank), packed)
         return None
 
     def fetch_parity(self, name: str, version: int, group: int) -> Optional[bytes]:
@@ -1996,6 +2228,12 @@ class VelocClient:
                 rate_share=spec.lane_rate_share,
                 max_queued=spec.admit_max_queued,
                 max_queued_bytes=spec.admit_max_queued_bytes)
+            # peer-assisted restore wiring: surface the cluster's per-tier
+            # read telemetry through backend.status()["tiers"], and route
+            # the cluster's post-seal catalog sync through the coalesced
+            # maintenance lane instead of inline external-tier I/O
+            self.backend.tier_stats = self.cluster.tier_read_stats
+            self.cluster.catalog_sync_soon = self._post_seal_sync_hook
         elif backend is not None:
             raise ValueError(
                 "backend= is only meaningful with mode='async' (sync mode "
@@ -2149,6 +2387,15 @@ class VelocClient:
                 lambda: self.cluster.sync_catalog(self.name), coalesce=True)
         else:
             self.cluster.sync_catalog(self.name)
+
+    def _post_seal_sync_hook(self, name: str, version: int):
+        """Cluster ``catalog_sync_soon`` target (async mode only): queue
+        the post-seal catalog sync as coalesced maintenance work.  Uses
+        the SAME kind as ``_schedule_catalog_sync`` so a seal-triggered
+        sync and the per-checkpoint sync collapse into one RMW."""
+        self.backend.submit_maintenance(
+            f"catalog:{name}:{self.rank}", version,
+            lambda: self.cluster.sync_catalog(name), coalesce=True)
 
     def wait(self, version: Optional[int] = None, timeout: Optional[float] = None
              ) -> bool:

@@ -164,6 +164,110 @@ class ReaderPool:
                 self._cv.wait(1.0)
         return job["results"]
 
+    def hedged(self, primary: Callable, hedges, budget_s: float
+               ) -> tuple:
+        """Hedged read: run ``primary`` concurrently; when it has not
+        produced a *useful* (non-None) result within ``budget_s`` seconds,
+        launch the first of ``hedges`` (a single callable or a ranked
+        list) and take the first useful result.  A launched hedge leg
+        that resolves *useless* (miss or error) while the primary is
+        still out ESCALATES to the next candidate — a hedge into an
+        empty tier answers "miss" in microseconds, and without
+        escalation that wasted probe would leave the caller pinned on
+        the stalled primary for its full duration.  Returns ``(value,
+        winner, outcomes)`` — ``winner`` is ``"primary"`` | ``"hedge"``;
+        ``outcomes[k]`` reports launched leg ``k`` as ``"win"`` |
+        ``"miss"`` | ``"err"`` | ``"pending"`` so the caller can
+        attribute telemetry and demote proven-empty sources (legs never
+        launched do not appear).
+
+        The losers are ignored, never cancelled: an abandoned slow leg
+        completes harmlessly in the background (its get lands in the
+        shared single-flight cache like any other), preserving the
+        exactly-once-per-winning-source discipline.  Bookkeeping lives
+        under the pool's existing ``RANK_READER`` condition — no new lock
+        rank.  Every leg runs on a dedicated daemon thread rather than a
+        pool worker, so a fully-loaded pool can never deadlock a hedge
+        behind the very fetch it is trying to cover — and, symmetrically,
+        a hedge that itself stalls never pins down a primary that
+        resolves first.  One asymmetric early-out: when the primary
+        resolves to a MISS (None, no error) while hedge legs are still
+        in flight, the call returns immediately with those legs marked
+        ``"pending"`` instead of blocking on them — the caller's ranked
+        walk then re-probes each as a budget-protected primary (the
+        in-flight leg's get is deduplicated by the single-flight cache),
+        so an empty primary never converts the next source into an
+        unprotected synchronous wait."""
+        if callable(hedges):
+            hedges = [hedges]
+        state = {"done": False, "value": None, "err": None}
+
+        def run_leg(fn, st, label):
+            def body():
+                value, err = None, None
+                try:
+                    value = fn()
+                except BaseException as e:  # noqa: BLE001 — deferred
+                    err = e
+                with self._cv:
+                    st["done"] = True
+                    st["value"], st["err"] = value, err
+                    self._cv.notify_all()
+            t = threading.Thread(target=body, daemon=True, name=label)
+            t.start()
+
+        run_leg(primary, state, "veloc-hedge-primary")
+        deadline = time.monotonic() + max(0.0, budget_s)
+        with self._cv:
+            while not state["done"]:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cv.wait(remaining)
+            if state["done"]:
+                if state["err"] is not None:
+                    raise state["err"]
+                return state["value"], "primary", []
+
+        def status(hs):
+            if not hs["done"]:
+                return "pending"
+            if hs["value"] is not None:
+                return "win"
+            return "err" if hs["err"] is not None else "miss"
+
+        hstates: list = []
+
+        def launch_next():
+            hs = {"done": False, "value": None, "err": None}
+            hstates.append(hs)
+            run_leg(hedges[len(hstates) - 1], hs, "veloc-hedge-leg")
+
+        # budget blown: launch the first hedge leg and race
+        launch_next()
+        with self._cv:
+            while True:
+                for hs in hstates:
+                    if hs["done"] and hs["value"] is not None:
+                        return hs["value"], "hedge", [status(h)
+                                                     for h in hstates]
+                if (hstates[-1]["done"] and not state["done"]
+                        and len(hstates) < len(hedges)):
+                    launch_next()  # escalate past the useless leg
+                    continue
+                if state["done"] and state["err"] is None:
+                    return (state["value"], "primary",
+                            [status(h) for h in hstates])
+                if state["done"] and all(h["done"] for h in hstates):
+                    # every leg resolved useless — surface an error
+                    if state["err"] is not None:
+                        raise state["err"]
+                    for hs in hstates:
+                        if hs["err"] is not None:
+                            raise hs["err"]
+                    return None, "primary", [status(h) for h in hstates]
+                self._cv.wait(1.0)
+
     def shutdown(self):
         with self._cv:
             self._stop = True
@@ -287,6 +391,12 @@ class ActiveBackend:
         self._stop = False
         self._draining = False  # shutdown in progress: backoffs collapse
         self._latest: dict[str, int] = {}  # kind -> newest version enqueued
+        #: per-tier read-telemetry provider for ``status()["tiers"]`` —
+        #: clients point this at ``Cluster.tier_read_stats`` so the
+        #: backend snapshot carries the restore-source health alongside
+        #: lane and lock stats.  Called OUTSIDE ``_cv`` (pure counter
+        #: reads, no lock-order entanglement).
+        self.tier_stats: Optional[Callable[[], dict]] = None
         self._threads = [threading.Thread(target=self._worker, daemon=True,
                                           name=f"veloc-backend-{i}")
                          for i in range(workers)]
@@ -609,11 +719,14 @@ class ActiveBackend:
 
         With no arguments: a backend-wide snapshot dict — total queue
         depths, in-flight tasks, error count, per-lock contention stats
-        (``locks`` is empty unless the runtime checker is enabled), and a
+        (``locks`` is empty unless the runtime checker is enabled), a
         ``lanes`` map with per-stream contention counters: queued
         tasks/bytes, running, admitted/rejected (admission control),
         dispatched, max/total lane wait seconds, weight, and the lane's
-        private rate budget if one is configured."""
+        private rate budget if one is configured — and a ``tiers`` map
+        with per-tier read telemetry (gets, bytes served, EWMA get
+        latency, miss/error streaks, hedge wins/losses) when a cluster
+        registered its stats provider (empty otherwise)."""
         if kind is None and version is None:
             with self._cv:
                 snap = {"queued": sum(len(ln.heap)
@@ -624,6 +737,8 @@ class ActiveBackend:
                         "lanes": {name: lane.stats()
                                   for name, lane in self._lanes.items()}}
             snap["locks"] = concurrency.lock_stats()
+            provider = self.tier_stats
+            snap["tiers"] = provider() if provider is not None else {}
             return snap
         if kind is None or version is None:
             raise TypeError("status() takes both kind and version, or neither")

@@ -62,6 +62,30 @@ class RestorePlan:
         self.packs = packs            # version -> rolling-pack key
         self.known = known            # versions with ANY metadata
         self._chains: dict[int, Optional[list[int]]] = {}
+        #: per-source demotion state for the multi-source read scheduler:
+        #: id(tier) -> multiplicative penalty on ``read_cost`` (miss/error
+        #: doubles it, a hit halves it back toward 1) — plan-scoped so one
+        #: degraded restore never poisons an unrelated plan, and keyed by
+        #: object identity because tier *names* repeat across nodes.
+        #: Single-key dict updates are GIL-atomic; shared readers may race
+        #: benignly (it only steers a heuristic ranking).
+        self.source_penalty: dict[int, float] = {}
+
+    #: penalty clamp: doubling caps out at 64x so a recovered source
+    #: re-promotes within ~6 hits instead of never
+    _PENALTY_CAP = 64.0
+
+    def penalty(self, tier) -> float:
+        return self.source_penalty.get(id(tier), 1.0)
+
+    def note_source(self, tier, ok: bool) -> None:
+        """Telemetry feedback from one source probe: a hit halves the
+        tier's penalty (toward 1), a miss/error doubles it (capped), so
+        ``fetch_shard_any_level``'s ranking demotes sources that keep
+        coming up empty and re-promotes them as they recover."""
+        p = self.source_penalty.get(id(tier), 1.0)
+        self.source_penalty[id(tier)] = \
+            max(1.0, p / 2.0) if ok else min(self._PENALTY_CAP, p * 2.0)
 
     def manifest(self, version: int) -> Optional[dict]:
         return self.manifests.get(int(version))
@@ -173,13 +197,150 @@ def _segment_hint(cluster, name: str, version: int) -> str:
 _UNRESOLVED = object()
 
 
+def _source_cost(plan: Optional[RestorePlan], src: dict) -> float:
+    """Live ranking key for one restore source: the tier's telemetry-based
+    ``read_cost`` scaled by the plan's demotion penalty.  Duck-typed tiers
+    without telemetry rank at a neutral 1.0 (penalty still applies)."""
+    tier = src["tier"]
+    cost_fn = getattr(tier, "read_cost", None)
+    try:
+        cost = float(cost_fn()) if callable(cost_fn) else 1.0
+    except Exception:  # noqa: BLE001 — a broken cost probe must not
+        cost = 1.0     # abort the restore; rank the source neutrally
+    if plan is not None:
+        cost *= plan.penalty(tier)
+    return cost
+
+
+#: Plan penalty at which a source stops being hedge material: reached
+#: after three consecutive missed walks (1 -> 2 -> 4 -> 8), cleared by
+#: one served walk (8 -> 4).  Deliberately based on the plan's per-WALK
+#: outcome rather than the tier's raw ``miss_streak``: a multi-key probe
+#: (the direct-key miss right before a segment hit) or several readers
+#: interleaving can spike the per-get streak on a perfectly healthy
+#: tier, and a stalled primary must never be left without a hedge
+#: candidate by such a transient.
+_HEDGE_TAINT_PENALTY = 8.0
+
+
+def _tainted(plan: Optional[RestorePlan], tier) -> bool:
+    return plan is not None and plan.penalty(tier) >= _HEDGE_TAINT_PENALTY
+
+
+#: Hedge fan-out bound per hop: a stalled primary may escalate through
+#: at most this many candidate legs.  Escalation exists because a
+#: not-yet-written-off source can still turn out empty (a fast-serving
+#: tier that answers its walks before cheaper sources are ever probed
+#: keeps a stale low penalty) — the first leg burns in microseconds on
+#: the miss and the next candidate takes over, instead of the caller
+#: riding out the primary's full stall.
+_HEDGE_MAX_LEGS = 3
+
+
+def _fetch_ranked(cluster, sources: list[dict], ok,
+                  plan: Optional[RestorePlan]) -> Optional[bytes]:
+    """Walk every source cheapest-first by live ``read_cost`` x plan
+    penalty.  When the cluster's ``restore_hedge_factor`` is on and a
+    source's fetch overruns ``factor x its EWMA get latency``, the
+    next-ranked sources are launched as escalating hedge legs and the
+    first success wins (losses/wins are attributed to the *hedge* tiers'
+    counters so exactly-once accounting on the primary stays
+    untouched)."""
+    sources = sorted(sources, key=lambda s: _source_cost(plan, s))
+    factor = float(getattr(cluster, "restore_hedge_factor", 0.0) or 0.0)
+    pool = None
+    if factor > 0:
+        getter = getattr(cluster, "reader_pool", None)
+        pool = getter() if callable(getter) else None
+    probed_empty: set[int] = set()  # tier ids a completed hedge leg missed
+    i = 0
+    while i < len(sources):
+        src = sources[i]
+        i += 1
+        if id(src["tier"]) in probed_empty:
+            continue
+        ewma = getattr(src["tier"], "ewma_get_s", None)
+        # Hedging covers a SLOW primary, not an EMPTY one: a source the
+        # plan has repeatedly demoted resolves its miss fast by itself,
+        # and arming a hedge on its microscopic EWMA budget would just
+        # fire into the next source without budget protection of its
+        # own.  Probe it plainly and let the ranked walk move on.
+        missing = _tainted(plan, src["tier"])
+        # Hedge legs must be worth firing: the next-ranked sources the
+        # plan has NOT written off, cheapest first.  Hedging into a
+        # known-empty tier wastes a leg — it answers "miss" in
+        # microseconds while the stalled primary keeps the caller
+        # pinned — but a source with a stale low penalty can still turn
+        # out empty, so the pool escalates through up to
+        # ``_HEDGE_MAX_LEGS`` candidates as legs resolve useless.
+        cands = []
+        for cand in sources[i:]:
+            if id(cand["tier"]) in probed_empty:
+                continue
+            if not _tainted(plan, cand["tier"]):
+                cands.append(cand)
+                if len(cands) >= _HEDGE_MAX_LEGS:
+                    break
+        if plan is not None and len(cands) > 1:
+            # For a hedge leg, certainty beats raw cost: a proven-serving
+            # source (penalty 1.0) recovers the stall in one fetch, while
+            # a cheap-but-unproven one risks burning the leg on a miss.
+            # Stable sort keeps cheapest-first within a penalty class.
+            cands.sort(key=lambda c: plan.penalty(c["tier"]))
+        if pool is not None and cands and ewma and not missing:
+            try:
+                value, winner, outcomes = pool.hedged(
+                    lambda s=src: ok(s["fetch"]()),
+                    [lambda n=c: ok(n["fetch"]()) for c in cands],
+                    factor * ewma)
+            except Exception:  # noqa: BLE001 — a raising source set
+                value, winner, outcomes = None, "primary", []  # reads as miss
+            for k, st in enumerate(outcomes):
+                ctier = cands[k]["tier"]
+                if st == "win":
+                    ctier.hedge_wins = getattr(ctier, "hedge_wins", 0) + 1
+                    if plan is not None:
+                        plan.note_source(ctier, True)
+                elif st in ("miss", "err"):
+                    # a completed hedge leg proved its tier empty too:
+                    # demote it and never walk to it again this fetch
+                    ctier.hedge_losses = getattr(ctier, "hedge_losses", 0) + 1
+                    if plan is not None:
+                        plan.note_source(ctier, False)
+                    probed_empty.add(id(ctier))
+                elif value is not None:
+                    # abandoned in-flight leg: the primary won while it
+                    # was still fetching — count the wasted get
+                    ctier.hedge_losses = getattr(ctier, "hedge_losses", 0) + 1
+                # pending leg on a missed primary: leave it re-probable —
+                # the walk retries it as a budget-protected primary and
+                # the single-flight cache dedups the in-flight get
+            if plan is not None and winner == "primary":
+                plan.note_source(src["tier"], value is not None)
+            if value is not None:
+                return value
+            continue
+        try:
+            blob = ok(src["fetch"]())
+        except Exception:  # noqa: BLE001 — a raising source reads as a
+            blob = None    # miss; the plan penalty demotes it for later hops
+        if plan is not None:
+            plan.note_source(src["tier"], blob is not None)
+        if blob is not None:
+            return blob
+    return None
+
+
 def fetch_shard_any_level(cluster, name: str, version: int, rank: int,
                           *, distance: int = 1,
                           expected_digest: Optional[str] = None,
-                          manifest=_UNRESOLVED) -> Optional[bytes]:
+                          manifest=_UNRESOLVED,
+                          plan: Optional[RestorePlan] = None
+                          ) -> Optional[bytes]:
     """Shard bytes from the cheapest healthy source.  Planned restores
     pass ``manifest`` (possibly None) so the parity fallback never
-    re-resolves the stream's manifest list per hop."""
+    re-resolves the stream's manifest list per hop, and ``plan`` so probe
+    outcomes feed the adaptive source ranking across hops."""
     from repro.kernels import ops as kops
 
     def ok(blob):
@@ -189,14 +350,25 @@ def fetch_shard_any_level(cluster, name: str, version: int, rank: int,
             return None
         return blob
 
-    # L1 / L3 (fetch_shard walks node tiers then external)
-    blob = ok(cluster.fetch_shard(name, version, rank))
-    if blob:
-        return blob
-    # L2a partner copy
-    blob = ok(cluster.fetch_partner_copy(name, version, rank, distance))
-    if blob:
-        return blob
+    sources_fn = getattr(cluster, "shard_sources", None)
+    if callable(sources_fn):
+        # adaptive multi-source walk: own node, partner node, peer seal
+        # copies and every external tier, ranked by live read_cost
+        blob = _fetch_ranked(
+            cluster, sources_fn(name, version, rank, distance=distance),
+            ok, plan)
+        if blob:
+            return blob
+    else:
+        # duck-typed cluster without the multi-source API: legacy order
+        # L1 / L3 (fetch_shard walks node tiers then external)
+        blob = ok(cluster.fetch_shard(name, version, rank))
+        if blob:
+            return blob
+        # L2a partner copy
+        blob = ok(cluster.fetch_partner_copy(name, version, rank, distance))
+        if blob:
+            return blob
     # L2b parity reconstruct
     m = _manifest_for(cluster, name, version) if manifest is _UNRESOLVED \
         else manifest
@@ -258,7 +430,7 @@ def _prefetch_chain(cluster, chain: list[int], rank: int, distance: int,
             return fetch_shard_any_level(
                 cluster, plan.name, v, rank, distance=distance,
                 expected_digest=plan.digest(v, rank),
-                manifest=plan.manifest(v))
+                manifest=plan.manifest(v), plan=plan)
         return fetch
 
     return dict(zip(chain, pool.run_all([mk(v) for v in chain])))
@@ -278,7 +450,7 @@ def _load_rank_walk(cluster, name: str, version: int, rank: int,
     digest = (m or {}).get("shard_digests", {}).get(rank)
     blob = fetch_shard_any_level(cluster, name, version, rank,
                                  distance=distance, expected_digest=digest,
-                                 manifest=m)
+                                 manifest=m, plan=plan)
     if blob is None:
         raise IOError(f"rank {rank} shard unrecoverable for v{version}"
                       + _segment_hint(cluster, name, version))
@@ -344,7 +516,7 @@ def load_rank_regions(cluster, name: str, version: int, rank: int,
             blob = fetch_shard_any_level(
                 cluster, name, v, rank, distance=distance,
                 expected_digest=plan.digest(v, rank),
-                manifest=plan.manifest(v))
+                manifest=plan.manifest(v), plan=plan)
         if blob is None:
             raise IOError(f"rank {rank} shard unrecoverable for v{v}"
                           + _segment_hint(cluster, name, v))
@@ -412,7 +584,8 @@ def chain_versions(cluster, name: str, version: int, rank: int = 0,
             continue
         # no metadata for this hop: the blob itself carries the pointer
         blob = fetch_shard_any_level(cluster, name, v, rank,
-                                     distance=distance, manifest=None)
+                                     distance=distance, manifest=None,
+                                     plan=plan)
         if blob is None:
             raise IOError(f"chain walk: v{v} unrecoverable")
         reader = fmt.ShardReader(blob)

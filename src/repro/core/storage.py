@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import os
 import re
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -77,6 +78,19 @@ class TierInfo:
 class StorageTier:
     info: TierInfo
 
+    #: EWMA smoothing for the observed get latency: heavy enough that one
+    #: outlier doesn't whipsaw the source ranking, light enough that a tier
+    #: going slow is noticed within a handful of gets.
+    _EWMA_ALPHA = 0.2
+    #: Winsorization cap for each latency sample, as a multiple of the
+    #: current EWMA.  A single straggler (GC pause, one stalled RPC) must
+    #: not blow up the estimate — hedge budgets are ``factor x EWMA``, so
+    #: a poisoned EWMA silently disables hedging for the very stalls it
+    #: exists to cover.  A genuine regime change still converges: samples
+    #: keep clamping at the cap, growing the EWMA geometrically
+    #: (x ``1 + alpha*(cap-1)`` per get) until it meets the new level.
+    _EWMA_SAMPLE_CAP = 4.0
+
     def __init__(self, info: TierInfo):
         self.info = info
         self._lock = TrackedLock(f"tier:{info.name}._lock",
@@ -87,6 +101,16 @@ class StorageTier:
         self.delete_calls = 0  # lifetime delete count (GC amplification)
         self.keys_calls = 0  # lifetime keys() listings (restart-planning
         #                      accounting: catalog-first restart needs zero)
+        # -- read telemetry (multi-source restore scheduling) -------------
+        # Updated lock-free like the counters above: single attribute
+        # stores are GIL-atomic and an occasionally-stale read only skews
+        # a heuristic ranking, never correctness.
+        self.bytes_read = 0  # payload bytes served by get() hits
+        self.ewma_get_s: Optional[float] = None  # observed get latency
+        self.miss_streak = 0   # consecutive gets that returned None
+        self.error_streak = 0  # consecutive gets that raised
+        self.hedge_wins = 0    # hedged restore reads this tier won
+        self.hedge_losses = 0  # hedges launched here beaten by the primary
 
     # -- accounting used by pick_tier ------------------------------------
     def busy(self) -> int:
@@ -95,12 +119,60 @@ class StorageTier:
     def reset_io_counters(self) -> None:
         """Zero the lifetime put/get/delete/keys counters so a benchmark
         or test can audit one phase in isolation (e.g. "this restore
-        performed zero listings") without tracking deltas by hand."""
+        performed zero listings") without tracking deltas by hand.  Read
+        telemetry counters reset too; the latency EWMA survives — it is a
+        live estimate, not a phase counter."""
         with self._lock:
             self.put_calls = 0
             self.get_calls = 0
             self.delete_calls = 0
             self.keys_calls = 0
+            self.bytes_read = 0
+            self.miss_streak = 0
+            self.error_streak = 0
+            self.hedge_wins = 0
+            self.hedge_losses = 0
+
+    def _note_get(self, dt_s: float, blob: Optional[bytes],
+                  error: bool = False) -> None:
+        prev = self.ewma_get_s
+        if prev is None:
+            self.ewma_get_s = dt_s
+        else:
+            dt_s = min(dt_s, self._EWMA_SAMPLE_CAP * prev)  # tail-resistant
+            self.ewma_get_s = prev + self._EWMA_ALPHA * (dt_s - prev)
+        if error:
+            self.error_streak += 1
+            return
+        self.error_streak = 0
+        if blob is None:
+            self.miss_streak += 1
+        else:
+            self.miss_streak = 0
+            self.bytes_read += len(blob)
+
+    def read_cost(self, nbytes: int = 1 << 20) -> float:
+        """Estimated seconds to serve ``nbytes`` from this tier right now:
+        observed get latency (EWMA; the nominal transfer time before any
+        get completed) plus the nominal transfer time, scaled by write
+        pressure like ``pick_tier`` — and penalized by the current
+        miss/error streak so a source that keeps coming up empty or keeps
+        raising sinks in the restore ranking until it serves again."""
+        xfer = nbytes / (max(self.info.gbps, 1e-3) * 1e9)
+        lat = self.ewma_get_s if self.ewma_get_s is not None else xfer
+        cost = (lat + xfer) * (1 + self.busy())
+        return cost * (1 + self.miss_streak + 2 * self.error_streak)
+
+    def read_stats(self) -> dict:
+        """Operator snapshot of the read telemetry (surfaced cluster-wide
+        via ``Cluster.tier_read_stats`` and ``backend.status()["tiers"]``)."""
+        return {"gets": self.get_calls,
+                "bytes": self.bytes_read,
+                "ewma_get_ms": round((self.ewma_get_s or 0.0) * 1e3, 4),
+                "miss_streak": self.miss_streak,
+                "error_streak": self.error_streak,
+                "hedge_wins": self.hedge_wins,
+                "hedge_losses": self.hedge_losses}
 
     def _enter(self):
         concurrency.note_tier_io(self, "put")
@@ -117,12 +189,21 @@ class StorageTier:
         raise NotImplementedError
 
     def get(self, key: str) -> Optional[bytes]:
-        """Fetch one key (None when absent).  Counted in ``get_calls`` and
-        checked by the IO-under-lock detector; subclasses implement
+        """Fetch one key (None when absent).  Counted in ``get_calls``,
+        checked by the IO-under-lock detector, and timed into the read
+        telemetry (EWMA latency, bytes served, miss/error streaks) that
+        drives ``read_cost`` source ranking; subclasses implement
         ``_get``."""
         self.get_calls += 1
         concurrency.note_tier_io(self, "get")
-        return self._get(key)
+        t0 = time.perf_counter()
+        try:
+            blob = self._get(key)
+        except BaseException:
+            self._note_get(time.perf_counter() - t0, None, error=True)
+            raise
+        self._note_get(time.perf_counter() - t0, blob)
+        return blob
 
     def _get(self, key: str) -> Optional[bytes]:
         raise NotImplementedError

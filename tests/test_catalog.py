@@ -772,3 +772,44 @@ def test_successful_seal_retry_reaches_the_catalog(tmp_path):
     assert err is None
     assert cat["versions"][1]["sealed"] is True
     assert cat["versions"][1]["location"] == "segment"
+
+
+def test_manual_retry_seal_syncs_catalog_before_crash(tmp_path):
+    """Write-behind narrowing: the catalog RMW is queued (or run) right
+    after EVERY successful seal — including a manual ``retry_seal`` with
+    no maintenance lane behind it — so a crash between the seal and the
+    next scheduled sync no longer hides the newest sealed version from
+    catalog-first restore planning."""
+    cfg = _delta_cfg(tmp_path)
+    cluster = Cluster(cfg, nranks=1)
+    wrap_external_tiers(
+        cluster, lambda t: FlakyTier(t, fail_puts=True,
+                                     match=fmt.segment_key(cfg.name, 2),
+                                     fail_first=1))
+    client = VelocClient(cfg, cluster, rank=0)
+    rng = np.random.default_rng(0)
+    w1 = rng.standard_normal(50_000).astype(np.float32)
+    assert not client.checkpoint({"w": w1}, version=1,
+                                 device_snapshot=False).module_errors
+    w2 = w1.copy()
+    w2[:500] += 1.0
+    fut = client.checkpoint({"w": w2}, version=2, device_snapshot=False)
+    assert fut.module_errors, "injected seal failure did not surface"
+    assert cluster.seal_retry_pending(cfg.name) == [2]
+    assert cluster.retry_seal(cfg.name, 2)
+    # "crash": no shutdown, no explicit sync_catalog.  A fresh process on
+    # new hardware must still see v2 sealed — catalog-first, zero listings.
+    fresh = Cluster(cfg, nranks=1)
+    for tiers in fresh._node_tiers:
+        for t in tiers:
+            t.wipe()
+    _reset_keys_counters(fresh)
+    plan = rst.plan_restore(fresh, cfg.name)
+    assert plan.mode == "catalog"
+    assert plan.candidates and plan.candidates[0]["version"] == 2
+    regs = rst.load_rank_regions(fresh, cfg.name, 2, 0, plan=plan)
+    assert regs["w"].tobytes() == w2.tobytes()
+    assert sum(t.keys_calls for t in _all_tiers(fresh)) == 0
+    cat, err = read_catalog(fresh.external_tiers[0], cfg.name)
+    assert err is None
+    assert cat["versions"][2]["sealed"] is True
